@@ -1,0 +1,71 @@
+"""Paper §3: analytic communication model for model- vs data-parallel SGD
+and for distributed HF. These are the exact formulas from the paper, used by
+fig5_scaling and validated in tests/test_comm_model.py.
+
+Model parallelism (weights split over N nodes, layer dims d_1..d_l):
+  floats exchanged / epoch ≈ 2 · (n/b) · b · Σ_i d_i
+  synchronizations / epoch = 2 · l · n/b
+
+Data parallelism (weights replicated, data split):
+  floats exchanged / epoch ≈ (n/b) · log(N) · Σ_i d_{i-1}·d_i
+  synchronizations / epoch = 2 · n/b
+
+Distributed HF (this paper): per OUTER iteration —
+  1 gradient reduce + K Krylov-iteration HVP reduces + E line-search loss
+  reduces, each of model size (gradient/HVP) or scalar (loss);
+  outer iterations per epoch ≈ 1 (full-batch gradient).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+
+def mp_floats_per_epoch(n: int, b: int, dims: Sequence[int]) -> float:
+    return 2.0 * (n / b) * b * sum(dims[1:-1] if len(dims) > 2 else dims)
+
+
+def mp_syncs_per_epoch(n: int, b: int, n_layers: int) -> float:
+    return 2.0 * n_layers * n / b
+
+
+def dp_floats_per_epoch(n: int, b: int, dims: Sequence[int], N: int) -> float:
+    weights = sum(d0 * d1 for d0, d1 in zip(dims[:-1], dims[1:]))
+    return (n / b) * max(math.log2(max(N, 2)), 1.0) * weights
+
+
+def dp_syncs_per_epoch(n: int, b: int) -> float:
+    return 2.0 * n / b
+
+
+def model_size(dims: Sequence[int]) -> int:
+    return sum(d0 * d1 + d1 for d0, d1 in zip(dims[:-1], dims[1:]))
+
+
+def hf_floats_per_iteration(dims: Sequence[int], cg_iters: int, ls_evals: int) -> float:
+    m = model_size(dims)
+    return (1 + cg_iters) * m + ls_evals  # grad + HVPs (model-sized) + scalars
+
+
+def hf_syncs_per_iteration(cg_iters: int, ls_evals: int) -> int:
+    return 1 + cg_iters + ls_evals
+
+
+def sgd_syncs_per_epoch(n: int, b: int, N: int) -> float:
+    """Data-parallel SGD: one reduce+broadcast per mini-batch step."""
+    return 2.0 * n / b
+
+
+def speedup_model(
+    n_nodes: int, *, compute_s_per_node_unit: float, bytes_per_sync: float,
+    syncs: float, bw_bytes_s: float = 12.5e9, latency_s: float = 5e-6,
+) -> float:
+    """T(N) = compute/N + syncs·(latency·log2(N) + bytes/bw·(N-1)/N).
+    Ring-allreduce cost model; returns T(1)/T(N)."""
+    t1 = compute_s_per_node_unit + 0.0
+    comm = syncs * (
+        latency_s * max(math.log2(max(n_nodes, 2)), 1.0)
+        + (bytes_per_sync / bw_bytes_s) * (n_nodes - 1) / max(n_nodes, 1)
+    )
+    tn = compute_s_per_node_unit / n_nodes + comm
+    return t1 / tn

@@ -1,0 +1,71 @@
+"""Paper Fig. 3: SGD vs HF variants on the MNIST network (784-400-10).
+
+Reports objective vs (outer) iterations, vs epochs (effective data passes),
+and vs #communications — the paper's three x-axes. One SGD "iteration" is one
+epoch (paper convention). Communications are counted with the §3 model:
+SGD data-parallel = 2 reduces per mini-batch; HF = 1 (grad) + K (HVP) + E
+(line-search) reduces per outer iteration.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_mlp import MNIST_FIG3
+from repro.core import HFConfig, hf_init, hf_step
+from repro.data import classification_dataset
+from repro.data.synthetic import minibatches
+from repro.models import build_mlp
+
+from .comm_model import hf_syncs_per_iteration, sgd_syncs_per_epoch
+
+N_TRAIN = 4096
+N_NODES = 16
+ITERS = 15
+
+
+def run(log=print):
+    model = build_mlp(MNIST_FIG3)
+    data = classification_dataset(jax.random.PRNGKey(0), N_TRAIN, 784, 10)
+    rows = []
+
+    for solver in ("gn_cg", "hessian_cg", "hybrid_cg", "bicgstab"):
+        cfg = HFConfig(solver=solver, max_cg_iters=10)
+        params = model.init(jax.random.PRNGKey(1))
+        state = hf_init(params, cfg)
+        step = jax.jit(lambda p, s: hf_step(
+            model.loss_fn, p, s, data, data, cfg,
+            model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+        params, state, m = step(params, state)  # warmup/compile
+        t0 = time.time()
+        comms = epochs = 0.0
+        for i in range(ITERS):
+            params, state, m = step(params, state)
+            comms += hf_syncs_per_iteration(int(m["cg_iters"]) * 2, int(m["ls_evals"]))
+            epochs += 1 + 0.25 * 2 * int(m["cg_iters"]) + 0.5 * int(m["ls_evals"])
+        dt = (time.time() - t0) / ITERS
+        loss = float(model.loss_fn(params, data))
+        rows.append((f"fig3/{solver}", dt * 1e6,
+                     f"loss={loss:.4f} epochs={epochs:.0f} comms={comms:.0f}"))
+
+    # SGD / momentum-SGD baselines, batch 64
+    from repro.optim.first_order import momentum_sgd, sgd as sgd_opt
+    for name, opt in (("sgd", sgd_opt(0.1)), ("msgd", momentum_sgd(0.1))):
+        params = model.init(jax.random.PRNGKey(1))
+        st = opt.init(params)
+        stepf = jax.jit(lambda p, s, b: opt.step(model.loss_fn, p, s, b))
+        b0 = next(minibatches(data, 64, seed=0))
+        params, st, _ = stepf(params, st, b0)
+        t0 = time.time()
+        comms = 0.0
+        for ep in range(ITERS):
+            for b in minibatches(data, 64, seed=ep):
+                params, st, _ = stepf(params, st, b)
+            comms += sgd_syncs_per_epoch(N_TRAIN, 64, N_NODES)
+        dt = (time.time() - t0) / ITERS
+        loss = float(model.loss_fn(params, data))
+        rows.append((f"fig3/{name}", dt * 1e6,
+                     f"loss={loss:.4f} epochs={ITERS} comms={comms:.0f}"))
+    return rows

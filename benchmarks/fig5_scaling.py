@@ -1,0 +1,76 @@
+"""Paper Fig. 5: multi-node scaling of distributed HF on the TIMIT network
+(360-512x3-1973).
+
+The paper measures wall-clock on 1-32 Xeon nodes (2.65 TFLOP/s each) over
+Omni-Path; this repo has one CPU whose wall-clock is ~10³ slower than a
+cluster node, which would hide the communication term entirely. So the
+*compute* term is the analytic FLOP count of each component (gradient = 6·m·B,
+one CG iteration = 2 HVPs = 12·m·B, line-search eval = 2·m·B) at the paper's
+per-node throughput × 50% efficiency, and the *communication* term is the §3
+ring-allreduce model. Reported: projected speedup per (node count × batch
+size) — reproducing the paper's observations that scaling is near-linear
+only for B ≥ 4096, that small batches are the primary scaling bottleneck,
+and that the CG solve is the non-scaling component (its per-iteration
+compute is batch-independent-per-node while its reduces are not).
+
+The CPU-measured per-component times are also reported (sanity anchor for
+the FLOP model), via one small-B run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_mlp import TIMIT_FIG5
+from repro.core import make_hvp
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+from .comm_model import model_size, speedup_model
+
+NODE_FLOPS = 2.65e12 * 0.5   # paper's Xeon node at 50% efficiency
+K_CG, N_LS = 10, 2
+
+
+def _time_it(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def run(log=print):
+    rows = []
+    msize = model_size(TIMIT_FIG5)
+    msize_bytes = msize * 4
+
+    # CPU sanity anchor (small batch): measured per-component wall time
+    model = build_mlp(TIMIT_FIG5)
+    params = model.init(jax.random.PRNGKey(1))
+    data = classification_dataset(jax.random.PRNGKey(0), 1024, 360, 1973)
+    v = jax.tree_util.tree_map(jnp.ones_like, params)
+    t_grad = _time_it(jax.jit(lambda p, b: jax.grad(model.loss_fn)(p, b)), params, data)
+    t_hvp = _time_it(jax.jit(lambda p, b, vv: make_hvp(model.loss_fn, p, b)(vv)),
+                     params, data, v)
+    rows.append(("fig5/cpu_anchor_B1024", t_grad * 1e6,
+                 f"grad={t_grad*1e3:.1f}ms hvp={t_hvp*1e3:.1f}ms "
+                 f"hvp/grad={t_hvp/t_grad:.2f} (paper: ~2x gradient cost)"))
+
+    for B in (256, 1024, 4096, 16384):
+        # analytic per-node compute of one outer iteration at paper hardware
+        t_grad_n = 6.0 * msize * B / NODE_FLOPS
+        t_hvp_n = 12.0 * msize * (B // 4) / NODE_FLOPS   # curvature batch B/4
+        t_ls_n = 2.0 * msize * B / NODE_FLOPS
+        t_compute = t_grad_n + K_CG * t_hvp_n + N_LS * t_ls_n
+        syncs = 1 + K_CG + N_LS
+        for N in (1, 2, 4, 8, 16, 32):
+            sp = speedup_model(
+                N, compute_s_per_node_unit=t_compute,
+                bytes_per_sync=msize_bytes, syncs=syncs,
+            )
+            rows.append((f"fig5/B{B}_N{N}", t_compute * 1e6 / N,
+                         f"speedup={sp:.2f} compute={t_compute*1e3:.1f}ms"))
+    return rows

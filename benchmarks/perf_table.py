@@ -1,0 +1,42 @@
+"""Render the §Perf optimized-vs-baseline comparison table from the dry-run
+records in experiments/dryrun (baseline) and experiments/perf (optimized)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def rows(perf_dir="experiments/perf", base_dir="experiments/dryrun", suffix="_opt.json"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(perf_dir, f"*{suffix}"))):
+        r = json.load(open(f))
+        arch, shape, mesh = r["arch"], r["shape"], r["mesh"]
+        tag = "1pod" if mesh == "16x16" else "2pod"
+        base_path = os.path.join(base_dir, f"{arch}_{shape}_{tag}_bicgstab.json")
+        if not os.path.exists(base_path):
+            continue
+        b = json.load(open(base_path))
+        bt, ot = b["roofline"], r["roofline"]
+        dom_b, dom_o = bt[bt["bottleneck"]], ot[ot["bottleneck"]]
+        out.append({
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "base": f"{bt['bottleneck'].replace('_s','')} {dom_b:.3g}s",
+            "opt": f"{ot['bottleneck'].replace('_s','')} {dom_o:.3g}s",
+            "gain": f"{dom_b/dom_o:.1f}x",
+            "hbm": f"{b['memory'].get('per_device_total_gib')} → {r['memory'].get('per_device_total_gib')}",
+            "useful": f"{b.get('useful_flops_ratio')} → {r.get('useful_flops_ratio')}",
+        })
+    return out
+
+
+def markdown():
+    cols = ("arch", "shape", "mesh", "base", "opt", "gain", "hbm", "useful")
+    lines = ["| " + " | ".join(cols) + " |", "|" + "---|" * len(cols)]
+    for row in rows():
+        lines.append("| " + " | ".join(str(row[c]) for c in cols) + " |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown())

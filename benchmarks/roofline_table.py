@@ -1,0 +1,59 @@
+"""Aggregate the dry-run JSON records into the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "mesh", "status", "compute_s", "memory_s",
+        "collective_s", "bottleneck", "useful", "hbm_gib")
+
+
+def load_records(dryrun_dir="experiments/dryrun", solver="bicgstab"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*_{solver}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def row_of(r):
+    if r["status"] != "ok":
+        return {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": r["status"] + (f" ({r.get('reason','')})" if r.get("reason") else ""),
+            "compute_s": "", "memory_s": "", "collective_s": "",
+            "bottleneck": "", "useful": "", "hbm_gib": "",
+        }
+    t = r["roofline"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"], "status": "ok",
+        "compute_s": f"{t['compute_s']:.2e}", "memory_s": f"{t['memory_s']:.2e}",
+        "collective_s": f"{t['collective_s']:.2e}",
+        "bottleneck": t["bottleneck"].replace("_s", ""),
+        "useful": r.get("useful_flops_ratio", ""),
+        "hbm_gib": r.get("memory", {}).get("per_device_total_gib", ""),
+    }
+
+
+def markdown_table(recs):
+    rows = [row_of(r) for r in recs]
+    head = "| " + " | ".join(COLS) + " |"
+    sep = "|" + "---|" * len(COLS)
+    body = ["| " + " | ".join(str(row[c]) for c in COLS) + " |" for row in rows]
+    return "\n".join([head, sep] + body)
+
+
+def run(log=print):
+    recs = load_records()
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    err = [r for r in recs if r["status"] == "error"]
+    rows = [("roofline/records_ok", 0.0, f"count={len(ok)}"),
+            ("roofline/records_skipped", 0.0, f"count={len(skipped)}"),
+            ("roofline/records_error", 0.0, f"count={len(err)}")]
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

@@ -1,0 +1,41 @@
+"""Benchmark harness — one benchmark family per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig3,fig4,fig5,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import fig3_variants, fig4_batchsize, fig5_scaling, kernels_bench, roofline_table
+    suites = {
+        "fig3": fig3_variants.run,
+        "fig4": fig4_batchsize.run,
+        "fig5": fig5_scaling.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline_table.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            for row_name, us, derived in fn(log=lambda *a: None):
+                print(f"{row_name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # keep the suite running
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

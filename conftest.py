@@ -1,0 +1,12 @@
+"""Pytest root conftest: make `repro` (src layout) and `benchmarks`
+importable regardless of PYTHONPATH. Deliberately does NOT touch XLA flags —
+smoke tests and benches must see the real (1-device) CPU; only
+launch/dryrun.py sets the 512-device flag, in its own process.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + greedy decode with the KV/state cache.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch zamba2-7b
+"""
+import argparse
+
+from repro.configs import ARCH_IDS
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=[a for a in ARCH_IDS if a != "whisper-small"],
+                    default="qwen2-1.5b")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+    gen = serve(args.arch, smoke=True, batch_size=args.batch_size,
+                prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print("first generated row:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

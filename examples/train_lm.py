@@ -1,0 +1,34 @@
+"""Train a (reduced) assigned-architecture LM with distributed HF vs SGD.
+
+  PYTHONPATH=src python examples/train_lm.py --arch qwen2-1.5b --steps 15
+
+Uses the smoke config on CPU; on a TPU pod drop --smoke handling via
+repro.launch.train --full with the production mesh.
+"""
+import argparse
+
+from repro.configs import ARCH_IDS
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=15)
+    ap.add_argument("--solvers", nargs="+",
+                    default=["bicgstab", "gn_cg", "momentum"])
+    args = ap.parse_args()
+
+    final = {}
+    for solver in args.solvers:
+        print(f"\n=== {args.arch} / {solver} ===")
+        _, _, hist = train(
+            args.arch, smoke=True, solver=solver, steps=args.steps,
+            batch_size=8, seq_len=64, lr=0.3,
+        )
+        final[solver] = hist[-1]["loss"]
+    print("\nfinal losses:", {k: round(v, 4) for k, v in final.items()})
+
+
+if __name__ == "__main__":
+    main()

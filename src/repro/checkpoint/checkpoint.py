@@ -1,0 +1,82 @@
+"""Flat-npz pytree checkpointing with step metadata.
+
+Leaves are addressed by their tree path ("blocks/b0_attn/attn/wq/w"), so a
+restore can rebuild into any pytree with the same structure — including the
+optimizer state. Atomic rename guards against torn writes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, params: Any, opt_state: Any = None, extra: dict | None = None):
+    os.makedirs(directory, exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten_with_paths(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten_with_paths(opt_state).items()})
+    meta = {"step": int(step), **(extra or {})}
+    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **payload)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[len("ckpt_"):-len(".npz")])
+        for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, params_like: Any, opt_state_like: Any = None):
+    """Restore into templates (shape/structure donors). Returns
+    (params, opt_state, meta)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        data = {k: z[k] for k in z.files if k != "__meta__"}
+
+    def rebuild(template, prefix):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat:
+            key = prefix + "/".join(_path_str(x) for x in p)
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = rebuild(params_like, "params/")
+    opt_state = rebuild(opt_state_like, "opt/") if opt_state_like is not None else None
+    return params, opt_state, meta

@@ -1,0 +1,53 @@
+"""Config registry: assigned architectures (by dashed id) + input shapes.
+
+Filenames use underscores (python modules); ids keep the assigned dashes.
+"""
+from .base import (
+    INPUT_SHAPES,
+    HFOptConfig,
+    InputShape,
+    ModelConfig,
+    RunConfig,
+    pad_vocab,
+)
+from . import (
+    chatglm3_6b,
+    granite_3_8b,
+    granite_moe_1b_a400m,
+    mixtral_8x22b,
+    phi_3_vision_4_2b,
+    qwen1_5_0_5b,
+    qwen2_1_5b,
+    whisper_small,
+    xlstm_1_3b,
+    zamba2_7b,
+)
+
+_MODULES = {
+    "mixtral-8x22b": mixtral_8x22b,
+    "xlstm-1.3b": xlstm_1_3b,
+    "zamba2-7b": zamba2_7b,
+    "granite-moe-1b-a400m": granite_moe_1b_a400m,
+    "whisper-small": whisper_small,
+    "phi-3-vision-4.2b": phi_3_vision_4_2b,
+    "qwen1.5-0.5b": qwen1_5_0_5b,
+    "chatglm3-6b": chatglm3_6b,
+    "granite-3-8b": granite_3_8b,
+    "qwen2-1.5b": qwen2_1_5b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].smoke_config()
+
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "HFOptConfig", "InputShape", "ModelConfig",
+    "RunConfig", "get_config", "get_smoke_config", "pad_vocab",
+]

@@ -1,0 +1,29 @@
+"""granite-moe-1b-a400m — 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="granite-moe-1b-a400m",
+        family="moe",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=512,
+        vocab_size=49155,
+        n_experts=32,
+        top_k=8,
+        block_pattern=("moe",),
+        tie_embeddings=True,
+        dtype="bfloat16",
+        source="[hf:ibm-granite/granite-3.0-1b-a400m-base]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab_size=512, n_experts=4, top_k=2, dtype="float32",
+    )

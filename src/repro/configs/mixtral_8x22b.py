@@ -1,0 +1,32 @@
+"""mixtral-8x22b — 56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+MoE 8 experts top-2, sliding-window attention. [arXiv:2401.04088]"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="mixtral-8x22b",
+        family="moe",
+        n_layers=56,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab_size=32768,
+        head_dim=128,
+        n_experts=8,
+        top_k=2,
+        sliding_window=4096,
+        rope_theta=1e6,
+        block_pattern=("moe",),
+        dtype="bfloat16",
+        source="[arXiv:2401.04088]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, n_experts=4, top_k=2, sliding_window=64,
+        dtype="float32",
+    )

@@ -1,0 +1,30 @@
+"""phi-3-vision-4.2b — 32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064;
+phi3-mini decoder + CLIP vision frontend STUBBED: input_specs feeds
+(B, 576, 1024) patch embeddings + linear projector.
+[hf:microsoft/Phi-3-vision-128k-instruct]"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="phi-3-vision-4.2b",
+        family="vlm",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        n_vision_tokens=576,
+        vision_dim=1024,
+        block_pattern=("attn",),
+        dtype="bfloat16",
+        source="[hf:microsoft/Phi-3-vision-128k-instruct]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=512, n_vision_tokens=8, vision_dim=32, dtype="float32",
+    )

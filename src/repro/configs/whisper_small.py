@@ -1,0 +1,33 @@
+"""whisper-small — enc-dec, 12+12L d_model=768 12H d_ff=3072 vocab=51865;
+conv/mel frontend STUBBED: input_specs feeds (B, 1500, 768) frame embeddings.
+[arXiv:2212.04356]"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="whisper-small",
+        family="audio",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51865,
+        is_encoder_decoder=True,
+        n_encoder_layers=12,
+        n_audio_frames=1500,
+        max_target_positions=448,
+        mlp_act="gelu",
+        norm_kind="layernorm",
+        dtype="bfloat16",
+        source="[arXiv:2212.04356]",
+        notes="decoder positions sinusoidal (paper: learned, cap 448) — see DESIGN.md",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, n_encoder_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=512, n_audio_frames=32, dtype="float32",
+    )

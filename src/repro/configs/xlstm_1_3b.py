@@ -1,0 +1,26 @@
+"""xlstm-1.3b — 48L d_model=2048 4H (kv=4) d_ff=0 vocab=50304; alternating
+sLSTM + mLSTM blocks (d_ff=0: no separate FFN sub-block). [arXiv:2405.04517]"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="xlstm-1.3b",
+        family="ssm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        block_pattern=("slstm", "mlstm"),
+        dtype="bfloat16",
+        source="[arXiv:2405.04517]",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, vocab_size=512,
+        ssm_chunk=16, dtype="float32",
+    )

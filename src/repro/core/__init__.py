@@ -1,0 +1,15 @@
+"""Core: the paper's distributed Hessian-free optimizer."""
+from .hf import HFConfig, HFState, hf_init, hf_step, SOLVERS
+from .hvp import fd_hvp, make_damped, make_gnvp, make_hvp
+from .line_search import armijo
+from .damping import lm_update
+from .solvers import KrylovResult, bicgstab, cg, sign_correct
+from . import tree_math
+
+__all__ = [
+    "HFConfig", "HFState", "hf_init", "hf_step", "SOLVERS",
+    "fd_hvp", "make_damped", "make_gnvp", "make_hvp",
+    "armijo", "lm_update",
+    "KrylovResult", "bicgstab", "cg", "sign_correct",
+    "tree_math",
+]

@@ -1,0 +1,24 @@
+"""Levenberg–Marquardt damping adaptation (Martens 2010, paper Alg. 2 line 8).
+
+ρ = actual reduction / predicted reduction of the quadratic model
+    m(δ) = gᵀδ + ½ δᵀ(G+λI)δ.
+
+ρ < 1/4  → trust the model less:  λ ← λ·inc
+ρ > 3/4  → trust the model more:  λ ← λ/dec
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LM_LOW = 0.25
+LM_HIGH = 0.75
+
+
+def lm_update(lam, f_old, f_new, pred_red, *, inc=1.5, dec=1.5, lam_min=1e-8, lam_max=1e8):
+    """Return (new λ, ρ). pred_red = m(δ) − m(0) (should be ≤ 0)."""
+    actual = f_new - f_old
+    rho = actual / jnp.minimum(pred_red, -1e-20)  # both negative if progress
+    lam_new = jnp.where(rho < LM_LOW, lam * inc, jnp.where(rho > LM_HIGH, lam / dec, lam))
+    # If the step was not even a descent step (rho<0 w/ pred_red<0), damp hard.
+    lam_new = jnp.where(actual > 0.0, lam * inc * inc, lam_new)
+    return jnp.clip(lam_new, lam_min, lam_max), rho

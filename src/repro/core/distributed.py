@@ -1,0 +1,79 @@
+"""Explicit data-parallel HF step via shard_map — the paper's Algorithm 2
+with its MPI schedule written out.
+
+Under pjit/GSPMD the collectives are implicit (sharding propagation inserts
+them); this module is the *explicit* form: each worker holds a batch shard,
+the loss is ``lax.pmean``-ed over the data axes, and therefore
+
+  * ``jax.grad``   of the pmean'd loss  = local grad + ONE all-reduce
+                                          (Alg. 2 line 4, "reduce to root"),
+  * each HVP       (jvp of that grad)   = local HVP + ONE all-reduce per
+                                          Krylov iteration (line 5),
+  * each line-search trial              = ONE scalar all-reduce (line 9).
+
+Everything else (Krylov recurrences, damping, direction selection) operates
+on replicated state, exactly like the paper's root-node logic — except no
+root: every chip is the root. The resulting step is numerically identical to
+the pjit path (tested) — use whichever fits the deployment; GSPMD can
+overlap/schedule, shard_map makes the schedule auditable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from .hf import HFConfig, hf_step
+
+
+def data_parallel_hf_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    mesh,
+    config: HFConfig,
+    *,
+    data_axes: Sequence[str] = ("data",),
+    hvp_frac: float = 1.0,
+    model_out_fn=None,
+    out_loss_fn=None,
+):
+    """Returns step(params, state, batch) -> (params, state, metrics).
+
+    ``batch`` leaves are sharded on their leading dim over ``data_axes``;
+    params/state are replicated (pure data parallelism, the paper's setting:
+    "we assume the size of the model is not huge").
+    """
+    axes = tuple(data_axes)
+
+    def dloss(p, b):
+        return jax.lax.pmean(loss_fn(p, b), axes)
+
+    def dout_loss(z, b):
+        return jax.lax.pmean(out_loss_fn(z, b), axes)
+
+    def hvp_slice(b):
+        if hvp_frac >= 1.0:
+            return b
+        return jax.tree_util.tree_map(
+            lambda x: x[: max(int(x.shape[0] * hvp_frac), 1)], b
+        )
+
+    # NOTE: replication checking must stay ON — it is what makes the
+    # transpose of the pmean'd loss insert the gradient psum (with it off,
+    # each worker would keep only its local gradient shard / N).
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axes)),
+        out_specs=(P(), P(), P()),
+    )
+    def step(params, state, batch):
+        return hf_step(
+            dloss, params, state, batch, hvp_slice(batch), config,
+            model_out_fn=model_out_fn,
+            out_loss_fn=None if out_loss_fn is None else dout_loss,
+        )
+
+    return step

@@ -1,0 +1,254 @@
+"""Distributed Hessian-free optimizer — paper Algorithm 2 as one jitted step.
+
+Variants (``HFConfig.solver``):
+  * ``"gn_cg"``      — Martens' HF: Gauss-Newton operator + CG (PSD; baseline).
+  * ``"hessian_cg"`` — exact stochastic Hessian + truncated CG (paper shows
+                       this is unstable — reproduced as a baseline).
+  * ``"hybrid_cg"``  — exact Hessian CG; after an iteration that encountered
+                       negative curvature, the *next* iteration uses the
+                       Gauss-Newton operator, then switches back (paper §5).
+  * ``"bicgstab"``   — the paper's contribution: Bi-CG-STAB on the indefinite
+                       exact Hessian; negative-curvature directions are
+                       captured and used as saddle-escape steps.
+
+The step is pure and jittable; under pjit with the batch sharded over
+("pod","data") every gradient / HVP / line-search loss evaluation contains
+exactly one logical all-reduce — the paper's MPI schedule (one reduce for g,
+one per Krylov iteration, one per line-search trial).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import damping as damping_mod
+from .hvp import make_damped, make_gnvp, make_hvp
+from .line_search import armijo
+from .solvers import bicgstab, cg, sign_correct
+from .tree_math import (
+    tree_axpy,
+    tree_dot,
+    tree_norm,
+    tree_scale,
+    tree_where,
+    tree_zeros_like,
+)
+
+SOLVERS = ("gn_cg", "hessian_cg", "hybrid_cg", "bicgstab")
+
+
+@dataclasses.dataclass(frozen=True)
+class HFConfig:
+    solver: str = "bicgstab"
+    max_cg_iters: int = 16
+    cg_tol: float = 5e-3
+    init_damping: float = 1.0
+    damping_inc: float = 1.5
+    damping_dec: float = 1.5
+    cg_decay: float = 0.95        # η: Krylov warm-start θ_0 = η δ_{k-1}
+    ls_c: float = 1e-2            # Armijo sufficient-decrease constant
+    ls_beta: float = 0.5
+    max_backtracks: int = 12
+    # Relative jitter on the Krylov warm start. Enriches the Krylov space with
+    # directions orthogonal to g so negative curvature invisible to the exact
+    # deterministic recurrence (g ⟂ eigenvector, e.g. the Fig. 2 saddle) is
+    # still discoverable — the same role mini-batch Hessian noise plays in the
+    # paper's stochastic setting, made deterministic and controllable.
+    krylov_jitter: float = 1e-3
+    # Minimum norm for a negative-curvature step: along NC directions the
+    # quadratic model is unbounded below so it prescribes no scale; we take at
+    # least this much and let the Armijo search (Alg. 2 line 9) globalize it.
+    nc_min_step: float = 0.1
+    # Jacobi preconditioning for the CG-family solvers (Chapelle & Erhan
+    # 2011; Martens 2010 §4.7): M = (|diag(Ĝ)| + λ)^α estimated by one
+    # Hutchinson probe per step. The paper omits it ("not much helpful,
+    # more computation and storage") — off by default, available for the
+    # ill-conditioned regimes where it does pay.
+    precondition: bool = False
+    precond_alpha: float = 0.75
+
+    def __post_init__(self):
+        if self.solver not in SOLVERS:
+            raise ValueError(f"solver must be one of {SOLVERS}, got {self.solver!r}")
+
+
+class HFState(NamedTuple):
+    lam: jax.Array          # λ damping
+    prev_delta: Any         # δ_{k-1} for Krylov warm start
+    use_gn: jax.Array       # hybrid flag: this iteration uses GN operator
+    step: jax.Array
+
+
+def hf_init(params, config: HFConfig) -> HFState:
+    return HFState(
+        lam=jnp.asarray(config.init_damping, jnp.float32),
+        # Krylov warm-start lives in f32 even for bf16 params (recurrence
+        # numerics); the HVP operator casts at its boundary.
+        prev_delta=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        ),
+        use_gn=jnp.zeros((), bool),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def hf_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    params,
+    state: HFState,
+    batch,
+    hvp_batch,
+    config: HFConfig,
+    model_out_fn: Optional[Callable[[Any, Any], jax.Array]] = None,
+    out_loss_fn: Optional[Callable[[jax.Array, Any], jax.Array]] = None,
+):
+    """One outer HF iteration. Returns (params, state, metrics).
+
+    ``batch``     — the full (global) batch: gradient + line search.
+    ``hvp_batch`` — the mini-batch for stochastic curvature (may be a slice of
+                    ``batch``; larger ⇒ better Hessian approximation, the
+                    paper's Fig. 4 batch-size scaling).
+    ``model_out_fn``/``out_loss_fn`` — network/loss split, required for the
+    Gauss-Newton operator (``gn_cg`` and ``hybrid_cg``).
+    """
+    needs_gn = config.solver in ("gn_cg", "hybrid_cg")
+    if needs_gn and (model_out_fn is None or out_loss_fn is None):
+        raise ValueError(f"solver {config.solver} requires model_out_fn/out_loss_fn")
+
+    # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) ------------
+    f0, g = jax.value_and_grad(loss_fn)(params, batch)
+
+    # ---- Alg.2 line 5: stochastic curvature operator on the mini-batch -----
+    exact = make_hvp(loss_fn, params, hvp_batch)
+    if needs_gn:
+        gn = make_gnvp(model_out_fn, out_loss_fn, params, hvp_batch)
+    if config.solver == "gn_cg":
+        G = gn
+    elif config.solver in ("hessian_cg", "bicgstab"):
+        G = exact
+    else:  # hybrid: runtime switch (both branches traced, one executed)
+        def G(v, _state_use_gn=state.use_gn):
+            return jax.lax.cond(_state_use_gn, gn, exact, v)
+
+    lam = state.lam
+    A = make_damped(G, lam)
+    b = jax.tree_util.tree_map(lambda x: -x.astype(jnp.float32), g)
+    x0 = tree_scale(config.cg_decay, state.prev_delta)
+    if config.krylov_jitter > 0.0:
+        # Sharding-preserving pseudo-noise (NOT jax.random — see
+        # tree_math.tree_pseudo_noise): seeded by the gradient values, the
+        # element position and the step counter.
+        from .tree_math import tree_pseudo_noise
+
+        jit_tree = tree_pseudo_noise(g, state.step)
+        scale = config.krylov_jitter * jnp.maximum(tree_norm(g), 1e-8) / jnp.maximum(
+            tree_norm(jit_tree), 1e-20
+        )
+        x0 = tree_axpy(scale, jit_tree, x0)
+
+    # ---- Alg.2 line 6: Krylov solve ----------------------------------------
+    if config.solver == "bicgstab":
+        res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters, tol=config.cg_tol)
+    elif config.precondition:
+        from .solvers import hutchinson_diag, pcg
+
+        diag = hutchinson_diag(G, b, state.step)
+        m_inv = jax.tree_util.tree_map(
+            lambda d: 1.0 / (jnp.abs(d) + lam) ** config.precond_alpha, diag
+        )
+        res = pcg(A, b, x0, lam=lam, M_inv=m_inv,
+                  max_iters=config.max_cg_iters, tol=config.cg_tol)
+    else:
+        res = cg(A, b, x0, lam=lam, max_iters=config.max_cg_iters, tol=config.cg_tol)
+
+    # ---- Alg.2 line 7: best descent direction among {solution, NC dir} -----
+    # Quadratic-model values come FREE from solver byproducts — no extra
+    # operator applications (each would cost a full HVP = 2 passes over the
+    # network; see EXPERIMENTS.md §Perf pair C):
+    #   A·x = b − r  (residual identity)  ⇒ m(s·x) = s·gᵀx + ½ xᵀ(b−r)
+    #   nc_dir has unit norm and measured raw curvature c = dᵀGd
+    #                                      ⇒ m(nc) = gᵀnc + ½ (c+λ)·‖nc‖²
+    # free CG-backtracking: the direction candidate is the best-model iterate
+    gx = tree_dot(g, res.x_best)
+    sign = jnp.where(jnp.sign(gx) == 0, 1.0, -jnp.sign(gx))
+    sol = tree_scale(sign, res.x_best)
+    sol_norm = tree_norm(sol)
+    xAx = tree_dot(res.x_best, jax.tree_util.tree_map(jnp.subtract, b, res.r_best))
+    m_sol = sign * gx + 0.5 * xAx
+    # Scale the (unit-norm) NC direction to the solution's magnitude so the
+    # quadratic-model comparison and the line search see comparable steps; the
+    # quadratic model itself is unbounded below along NC directions so it
+    # prescribes no scale — floor at nc_min_step and let Armijo globalize.
+    nc_scale = jnp.maximum(sol_norm, config.nc_min_step)
+    nc_raw = tree_scale(nc_scale, res.nc_dir)
+    nc, _ = sign_correct(g, nc_raw)
+    g_nc = tree_dot(g, nc)
+    m_nc = jnp.where(
+        res.nc_found,
+        g_nc + 0.5 * (res.nc_curv + lam) * nc_scale**2,
+        jnp.inf,
+    )
+    take_nc = m_nc < m_sol
+    delta = tree_where(take_nc, nc, sol)
+    m_lin = jnp.where(take_nc, g_nc, sign * gx)       # gᵀδ
+    m_quad = jnp.where(take_nc, m_nc - g_nc, 0.5 * xAx)  # ½ δᵀAδ
+
+    # Degenerate solve (zero direction) → steepest descent fallback (paper:
+    # "if negative curvature at the very first CG iteration, use −g").
+    d_norm = tree_norm(delta)
+    degenerate = d_norm < 1e-12
+    delta = tree_where(degenerate, b, delta)
+    gg = tree_dot(g, g)
+    m_lin = jnp.where(degenerate, -gg, m_lin)
+    m_quad = jnp.where(degenerate, 0.0, m_quad)
+
+    # ---- Alg.2 line 9: Armijo line search -----------------------------------
+    g_dot_delta = tree_dot(g, delta)
+    ls = armijo(
+        lambda p: loss_fn(p, batch), params, f0, delta, g_dot_delta,
+        c=config.ls_c, beta=config.ls_beta, max_backtracks=config.max_backtracks,
+    )
+
+    # ---- Alg.2 lines 8,10: LM damping + parameter update --------------------
+    # predicted reduction of the STEP TAKEN: m(αδ) = α·gᵀδ + α²·½δᵀAδ
+    pred_red = ls.alpha * m_lin + ls.alpha**2 * m_quad
+    pred_red = jnp.minimum(pred_red, -1e-20)
+    lam_new, rho = damping_mod.lm_update(
+        lam, f0, ls.f_new, pred_red,
+        inc=config.damping_inc, dec=config.damping_dec,
+    )
+    from .tree_math import tree_axpy_cast
+
+    new_params = tree_axpy_cast(ls.alpha, delta, params)
+    delta_taken = tree_scale(ls.alpha, delta)
+
+    if config.solver == "hybrid_cg":
+        # NC encountered this (exact-Hessian) iteration → GN next iteration;
+        # after a GN iteration always return to the exact Hessian.
+        use_gn_next = jnp.logical_and(jnp.logical_not(state.use_gn), res.nc_found)
+    else:
+        use_gn_next = jnp.zeros((), bool)
+
+    new_state = HFState(
+        lam=lam_new, prev_delta=delta_taken, use_gn=use_gn_next, step=state.step + 1
+    )
+    metrics = {
+        "loss": f0,
+        "loss_new": ls.f_new,
+        "grad_norm": tree_norm(g),
+        "lambda": lam_new,
+        "rho": rho,
+        "alpha": ls.alpha,
+        "ls_evals": ls.n_evals,
+        "cg_iters": res.iters,
+        "cg_residual": res.residual,
+        "nc_found": res.nc_found,
+        "nc_used": take_nc,
+        "nc_curv": res.nc_curv,
+        "step_norm": tree_norm(delta_taken),
+        "used_gn": state.use_gn,
+    }
+    return new_params, new_state, metrics

@@ -1,0 +1,92 @@
+"""Curvature-vector operators: exact Hessian (R-op) and Gauss-Newton.
+
+The paper's Algorithm 2 line 5 constructs the stochastic operator
+``G_k(v) = (1/N) sum_i  H_[i] v`` on a mini-batch, reduced across workers.
+Under pjit/GSPMD the reduction emerges from sharding the batch over the
+("pod","data") mesh axes — the jvp-of-grad below contains the same mean over
+examples the loss does, so XLA inserts exactly one all-reduce per HVP, which
+is the paper's one-MPI-reduce-per-CG-iteration schedule.
+
+Operators:
+  * ``make_hvp``  — exact stochastic Hessian (possibly indefinite; feeds
+    Bi-CG-STAB / Hessian-CG / Hybrid-CG).
+  * ``make_gnvp`` — Gauss-Newton: J^T (∇²_z ℓ) J v (PSD for convex ℓ; feeds
+    Martens' GN-CG and the Hybrid fallback).
+
+Both cost ≈ 2x a gradient, matching the paper's claim (Pearlmutter trick).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar
+
+
+def make_hvp(loss_fn: LossFn, params, batch) -> Callable[[Any], Any]:
+    """Exact Hessian-vector product operator v ↦ ∇²f(θ) v (forward-over-reverse)."""
+
+    def grad_fn(p):
+        return jax.grad(loss_fn)(p, batch)
+
+    def hvp(v):
+        # Krylov vectors are kept in f32 (recurrence stability) while params
+        # may be bf16 — cast the tangent at the operator boundary.
+        vc = jax.tree_util.tree_map(lambda t, p: t.astype(p.dtype), v, params)
+        return jax.jvp(grad_fn, (params,), (vc,))[1]
+
+    return hvp
+
+
+def make_gnvp(
+    model_out_fn: Callable[[Any, Any], jax.Array],
+    out_loss_fn: Callable[[jax.Array, Any], jax.Array],
+    params,
+    batch,
+) -> Callable[[Any], Any]:
+    """Gauss-Newton-vector product v ↦ Jᵀ (∇²_z ℓ(z)) J v.
+
+    ``model_out_fn(params, batch) -> z`` is the network output (e.g. logits),
+    ``out_loss_fn(z, batch) -> scalar`` the (convex-in-z) loss. The GN matrix
+    drops the second-derivative-of-network term, guaranteeing PSD curvature —
+    this is exactly what Martens' HF uses and what the paper argues loses the
+    negative-curvature information.
+    """
+
+    def f(p):
+        return model_out_fn(p, batch)
+
+    def gnvp(v):
+        v = jax.tree_util.tree_map(lambda t, p: t.astype(p.dtype), v, params)
+        z, jv = jax.jvp(f, (params,), (v,))  # J v  (forward)
+        # H_out @ jv  via jvp of the output-space gradient (z is fixed point).
+        g_out = lambda zz: jax.grad(out_loss_fn)(zz, batch)
+        hjv = jax.jvp(g_out, (z,), (jv,))[1]
+        # Jᵀ (H_out J v)  (reverse)
+        _, vjp_fn = jax.vjp(f, params)
+        return vjp_fn(hjv)[0]
+
+    return gnvp
+
+
+def make_damped(op: Callable[[Any], Any], lam: jax.Array) -> Callable[[Any], Any]:
+    """B(v) = G(v) + λ v  (Algorithm 1 line 4)."""
+
+    def damped(v):
+        gv = op(v)
+        return jax.tree_util.tree_map(lambda g, x: g + lam * x, gv, v)
+
+    return damped
+
+
+def fd_hvp(loss_fn: LossFn, params, batch, v, eps: float = 1e-4):
+    """Finite-difference HVP oracle (tests only): (∇f(θ+εv) − ∇f(θ−εv)) / 2ε."""
+    gp = jax.grad(loss_fn)(
+        jax.tree_util.tree_map(lambda p, t: p + eps * t, params, v), batch
+    )
+    gm = jax.grad(loss_fn)(
+        jax.tree_util.tree_map(lambda p, t: p - eps * t, params, v), batch
+    )
+    return jax.tree_util.tree_map(lambda a, b: (a - b) / (2 * eps), gp, gm)

@@ -1,0 +1,118 @@
+"""Pytree vector algebra used by the Krylov solvers.
+
+All Krylov iterates (r, p, s, x, ...) are pytrees with the same structure as
+the model parameters. Keeping them as pytrees (instead of ravelling into one
+flat vector) preserves per-tensor shardings under pjit — every dot product
+lowers to a per-shard reduction + one small all-reduce, and every axpy is
+embarrassingly parallel. This is the TPU-native analogue of the paper's
+"reduce to root" MPI calls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_dot(a, b) -> jax.Array:
+    """<a, b> in fp32 regardless of leaf dtype (Krylov recurrences are fragile).
+
+    Deliberately ``sum(x*y)`` and NOT ``vdot``: vdot reshapes to 1-D, and a
+    flatten of a multi-axis-sharded tensor is unrepresentable in GSPMD, so it
+    all-gathers the operand first — on mixtral-8x22b that turned every Krylov
+    dot into a 168 GiB all-gather (EXPERIMENTS.md §Perf pair A). The
+    elementwise form reduces locally per shard + one scalar all-reduce, which
+    is the paper's per-CG-iteration MPI allreduce.
+    """
+    leaves = [
+        jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    ]
+    return jnp.sum(jnp.stack(leaves))
+
+
+def tree_norm(a) -> jax.Array:
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(alpha, a):
+    return jax.tree_util.tree_map(lambda x: alpha * x, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree_util.tree_map(lambda u, v: alpha * u + v, x, y)
+
+
+def tree_axpy_cast(alpha, x, y):
+    """(alpha * x + y) cast back to y's leaf dtypes — parameter updates from
+    f32 Krylov directions onto (possibly bf16) params."""
+    return jax.tree_util.tree_map(
+        lambda u, v: (alpha * u.astype(jnp.float32) + v.astype(jnp.float32)).astype(v.dtype),
+        x, y,
+    )
+
+
+def tree_axpby(alpha, x, beta, y):
+    """alpha * x + beta * y."""
+    return jax.tree_util.tree_map(lambda u, v: alpha * u + beta * v, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_where(cond, a, b):
+    """Select whole trees on a scalar predicate."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
+def tree_cast(a, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), a)
+
+
+def tree_size(a) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_random_like(key, a, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    keys = jax.random.split(key, len(leaves))
+    new = [jax.random.normal(k, x.shape, dtype) for k, x in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def tree_pseudo_noise(tree, step):
+    """Deterministic elementwise pseudo-noise in [-1, 1] with the same pytree
+    structure: sin of a position/value/step hash.
+
+    Unlike ``jax.random.normal`` (whose output is born replicated and — when
+    added to a sharded Krylov vector — makes GSPMD all-gather the entire
+    model-sized tree; observed as 168 GiB all-gathers on mixtral-8x22b,
+    EXPERIMENTS.md §Perf pair A), every op here is elementwise or an iota, so
+    the noise inherits the consumer's sharding with zero communication.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    sf = jnp.asarray(step, jnp.float32)
+    for i, x in enumerate(leaves):
+        pos = jnp.zeros(x.shape, jnp.float32)
+        for d in range(x.ndim):
+            pos = pos + jax.lax.broadcasted_iota(jnp.float32, x.shape, d) * (
+                0.7391 + 0.2113 * d
+            )
+        n = jnp.sin(
+            x.astype(jnp.float32) * 1234.567
+            + pos * (1.0 + 0.13 * i)
+            + sf * 0.61803
+            + 0.5 * (i + 1)
+        )
+        out.append(n)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,12 @@
+from .synthetic import (
+    classification_dataset,
+    lm_batch,
+    batch_spec,
+    decode_inputs,
+    iterate_batches,
+)
+
+__all__ = [
+    "classification_dataset", "lm_batch", "batch_spec", "decode_inputs",
+    "iterate_batches",
+]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical hot spots, with pure-jnp oracles.
+
+  flash_attention — blockwise online-softmax attention (prefill/train fwd)
+  cg_fused        — fused Bi-CG-STAB vector recurrences (the paper's
+                    HBM-bound Krylov inner loop)
+  ssd_scan        — Mamba2/SSD intra-chunk kernel (zamba2/xLSTM hot-spot)
+
+Validated in interpret mode on CPU against the pure-jnp oracles; compiled
+path targets TPU.
+"""
+from . import ops, ref, ssd_scan
+from .ops import bicgstab_residual_dots, bicgstab_x_update, dot2, flash_attention
+from .ssd_scan import ssd_chunked_pallas, ssd_intra
+
+__all__ = ["ops", "ref", "ssd_scan", "bicgstab_residual_dots",
+           "bicgstab_x_update", "dot2", "flash_attention",
+           "ssd_chunked_pallas", "ssd_intra"]

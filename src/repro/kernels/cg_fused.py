@@ -1,0 +1,122 @@
+"""Fused Bi-CG-STAB vector recurrences as Pallas TPU kernels.
+
+The paper's inner loop streams ~N-element (model-sized) vectors through HBM;
+on TPU these recurrences are pure bandwidth. Fusing the axpy chains with the
+dot products they feed removes whole HBM passes:
+
+  * ``x_update``:       x + α·p + γ·s                (3 reads 1 write, vs 4r/2w)
+  * ``residual_dots``:  r = s − γ·As; ⟨r,r0*⟩; ⟨r,r⟩ (3 reads 1 write + scalars,
+                        vs 2r/1w + 2×2r for the separate dots)
+  * ``dot2``:           ⟨u,v⟩, ⟨v,v⟩                 (2 reads, vs 4)
+
+1-D grid over VMEM-sized chunks; per-block partial sums land in a
+(n_blocks,)-shaped output reduced by the (tiny) jnp.sum in ops.py. All
+accumulation in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64 * 1024  # 64k f32 elements = 256 KiB per operand tile in VMEM
+
+
+def _x_update_kernel(alpha_ref, gamma_ref, x_ref, p_ref, s_ref, o_ref):
+    a = alpha_ref[0]
+    g = gamma_ref[0]
+    o_ref[...] = (
+        x_ref[...].astype(jnp.float32)
+        + a * p_ref[...].astype(jnp.float32)
+        + g * s_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def x_update(x, p, s, alpha, gamma, *, block=BLOCK, interpret=False):
+    """x + alpha*p + gamma*s over flat f32 vectors (padded to block)."""
+    n = x.shape[0]
+    nb = pl.cdiv(n, block)
+    scal = lambda v: jnp.asarray([v], jnp.float32) if jnp.ndim(v) == 0 else v.reshape(1)
+    return pl.pallas_call(
+        _x_update_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(scal(alpha), scal(gamma), x, p, s)
+
+
+def _residual_dots_kernel(gamma_ref, s_ref, As_ref, r0s_ref, r_ref, d1_ref, d2_ref):
+    g = gamma_ref[0]
+    r = s_ref[...].astype(jnp.float32) - g * As_ref[...].astype(jnp.float32)
+    r_ref[...] = r
+    d1_ref[0] = jnp.sum(r * r0s_ref[...].astype(jnp.float32))
+    d2_ref[0] = jnp.sum(r * r)
+
+
+def residual_dots(s, As, r0s, gamma, *, block=BLOCK, interpret=False):
+    """r = s - gamma*As; returns (r, per-block <r,r0s>, per-block <r,r>)."""
+    n = s.shape[0]
+    nb = pl.cdiv(n, block)
+    scal = lambda v: jnp.asarray([v], jnp.float32) if jnp.ndim(v) == 0 else v.reshape(1)
+    r, d1, d2 = pl.pallas_call(
+        _residual_dots_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scal(gamma), s, As, r0s)
+    return r, d1, d2
+
+
+def _dot2_kernel(u_ref, v_ref, d1_ref, d2_ref):
+    u = u_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    d1_ref[0] = jnp.sum(u * v)
+    d2_ref[0] = jnp.sum(v * v)
+
+
+def dot2(u, v, *, block=BLOCK, interpret=False):
+    """Per-block partials of (<u,v>, <v,v>)."""
+    n = u.shape[0]
+    nb = pl.cdiv(n, block)
+    return pl.pallas_call(
+        _dot2_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, v)

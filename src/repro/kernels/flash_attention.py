@@ -1,0 +1,109 @@
+"""Flash attention (prefill/training forward) as a Pallas TPU kernel.
+
+Online-softmax blockwise attention: grid (batch, q_heads, q_blocks,
+k_blocks); running max/sum and the output accumulator live in VMEM scratch
+and persist across the innermost (k_blocks) grid dimension. Causal and
+sliding-window masks are applied inside the block; fully-masked key blocks
+contribute nothing (the m/l recurrence is a no-op for -inf rows).
+
+BlockSpecs stage (blk_q x hd) query tiles and (blk_k x hd) key/value tiles
+into VMEM; the MXU sees (blk_q x hd) @ (hd x blk_k) matmuls with
+hardware-aligned tiles (blk_* multiples of 128 for f32/bf16). GQA is handled
+in the index maps (kv head = q head // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale, causal, window, blk_q, blk_k, n_k_blocks):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]                                   # (blk_q, hd)
+    k = k_ref[0, :, 0, :]                                   # (blk_k, hd)
+    v = v_ref[0, :, 0, :]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                               # (blk_q, blk_k)
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = jnp.ones((blk_q, blk_k), bool)
+    if causal:
+        mask = jnp.logical_and(mask, k_pos <= q_pos)
+    if window is not None:
+        mask = jnp.logical_and(mask, k_pos > q_pos - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                                     # (blk_q, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows: exp(NEG_INF - NEG_INF) would be exp(0)=1
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(jnp.where(mask, logits - m_safe, NEG_INF))  # (blk_q, blk_k)
+    alpha = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev - m_safe))
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        norm = jnp.where(l_new <= 0.0, 1.0, l_new)
+        o_ref[0, :, 0, :] = (acc / norm).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    blk_q=128, blk_k=128, interpret=False):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = float(scale if scale is not None else 1.0 / (hd ** 0.5))
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, S)
+    assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
+    nq, nk = S // blk_q, S // blk_k
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

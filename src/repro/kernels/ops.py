@@ -1,0 +1,67 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret=True`` runs the kernel bodies in Python on CPU (how this repo
+validates them); on a real TPU pass interpret=False (default resolves from
+the backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import cg_fused, flash_attention as fa
+
+
+def _default_interpret():
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, blk_q=128, blk_k=128,
+                    interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return fa.flash_attention(
+        q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
+        interpret=interpret,
+    )
+
+
+def _pad_flat(x, block):
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bicgstab_x_update(x, p, s, alpha, gamma, *, interpret=None):
+    """x + alpha*p + gamma*s  (flat f32 vectors)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xp, n = _pad_flat(x, cg_fused.BLOCK)
+    pp, _ = _pad_flat(p, cg_fused.BLOCK)
+    sp, _ = _pad_flat(s, cg_fused.BLOCK)
+    return cg_fused.x_update(xp, pp, sp, alpha, gamma, interpret=interpret)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bicgstab_residual_dots(s, As, r0s, gamma, *, interpret=None):
+    """r = s - gamma*As; returns (r, <r,r0s>, <r,r>)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    sp, n = _pad_flat(s, cg_fused.BLOCK)
+    Ap, _ = _pad_flat(As, cg_fused.BLOCK)
+    rp, _ = _pad_flat(r0s, cg_fused.BLOCK)
+    r, d1, d2 = cg_fused.residual_dots(sp, Ap, rp, gamma, interpret=interpret)
+    return r[:n], jnp.sum(d1), jnp.sum(d2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dot2(u, v, *, interpret=None):
+    """(<u,v>, <v,v>)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    up, _ = _pad_flat(u, cg_fused.BLOCK)
+    vp, _ = _pad_flat(v, cg_fused.BLOCK)
+    d1, d2 = cg_fused.dot2(up, vp, interpret=interpret)
+    return jnp.sum(d1), jnp.sum(d2)

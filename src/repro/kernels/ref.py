@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd). GQA via head grouping."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = kj <= qi
+    if window is not None:
+        mask = jnp.logical_and(mask, kj > qi - window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def bicgstab_x_update_ref(x, p, s, alpha, gamma):
+    """x + alpha*p + gamma*s in f32."""
+    return (x.astype(jnp.float32) + alpha * p.astype(jnp.float32)
+            + gamma * s.astype(jnp.float32))
+
+
+def bicgstab_residual_dots_ref(s, As, r0s, gamma):
+    """r = s - gamma*As; returns (r, <r,r0s>, <r,r>)."""
+    r = s.astype(jnp.float32) - gamma * As.astype(jnp.float32)
+    return r, jnp.vdot(r, r0s.astype(jnp.float32)), jnp.vdot(r, r)
+
+
+def dot2_ref(u, v):
+    """(<u,v>, <v,v>) in f32."""
+    uf, vf = u.astype(jnp.float32), v.astype(jnp.float32)
+    return jnp.vdot(uf, vf), jnp.vdot(vf, vf)

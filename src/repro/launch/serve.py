@@ -1,0 +1,69 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --batch-size 4 --prompt-len 16 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..data import lm_batch
+from ..models import build_model
+
+
+def serve(arch: str, *, smoke=True, batch_size=4, prompt_len=16, gen_len=16,
+          log_fn=print):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, batch_size, prompt_len + 1)
+    prompt = dict(batch)
+    prompt["tokens"] = batch["tokens"][:, :prompt_len]
+    max_len = prompt_len + gen_len + (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompt)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    offset = cfg.n_vision_tokens if cfg.family == "vlm" else 0
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(gen_len - 1):
+        t = jnp.asarray(prompt_len + offset + i, jnp.int32)
+        logits, cache = decode(params, tok, t, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    log_fn(f"prefill {prompt_len} toks x{batch_size}: {t_prefill:.3f}s; "
+           f"decode {gen_len} steps: {t_decode:.3f}s "
+           f"({batch_size * (gen_len - 1) / max(t_decode, 1e-9):.1f} tok/s)")
+    return gen
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+    gen = serve(args.arch, smoke=args.smoke, batch_size=args.batch_size,
+                prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print("generated token ids (first row):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Per-tensor sharding rules: param-tree paths -> PartitionSpec.
+
+Megatron-style: attention heads / FFN / experts / vocab dims on the "model"
+axis; batch on ("pod","data"). Optional FSDP shards the d_model dims of the
+stacked block weights over "data" as well (ZeRO-3 style — GSPMD inserts the
+per-layer all-gathers inside the scan). A dim is sharded only if the mesh
+axis divides it AND the semantic unit (heads, kv-heads, experts) divides —
+otherwise it falls back to replication, never to padding.
+
+Krylov vectors / optimizer state inherit the exact param sharding, so every
+tree_dot in the solvers lowers to per-shard partial reductions + one scalar
+all-reduce (the paper's per-CG-iteration MPI allreduce).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes_if_divisible
+
+# (path regex, logical dims for the TRAILING shape dims). Earlier rules win.
+RULES = [
+    (r"embed/table$", ("vocab", "d_model")),
+    (r"lm_head/w$", ("d_model", "vocab")),
+    (r"(wq)/w$", ("d_model", "heads_out")),
+    (r"(wk|wv)/w$", ("d_model", "kv_heads_out")),
+    (r"(wq)/b$", ("heads_out",)),
+    (r"(wk|wv)/b$", ("kv_heads_out",)),
+    (r"wo/w$", ("heads_out", "d_model")),
+    (r"mlp/(wi|wg)/w$", ("d_model", "ff")),
+    (r"mlp/wo/w$", ("ff", "d_model")),
+    (r"router/w$", ("d_model", None)),
+    (r"experts/(wi|wg)/w$", ("experts", "d_model", "ff")),
+    (r"experts/wo/w$", ("experts", "ff", "d_model")),
+    (r"in_proj/w$", ("d_model", "ssm_inner")),
+    (r"out_proj/w$", ("ssm_inner", "d_model")),
+    (r"vision_proj/w$", ("d_model", "heads_out")),
+    (r"slstm/w$", ("d_model", None, None, "slstm_dh")),
+    (r"slstm/r$", (None, None, None, "slstm_dh")),
+    (r"(wi|wg)/w$", ("d_model", "ff")),        # bare mlp (enc-dec units)
+    (r"wo?/w$", ("ff", "d_model")),
+]
+
+_MODEL_DIMS = (
+    "vocab", "ff", "experts", "heads_out", "kv_heads_out", "ssm_inner", "slstm_dh"
+)
+
+
+def _semantic_ok(name: str, cfg, axis_size: int) -> bool:
+    if name == "heads_out":
+        return cfg.n_heads % axis_size == 0
+    if name == "kv_heads_out":
+        return cfg.n_kv_heads % axis_size == 0
+    if name == "experts":
+        return cfg.n_experts % axis_size == 0
+    return True
+
+
+def _build_spec(logical, shape, cfg, mesh, fsdp: bool) -> P:
+    n_extra = len(shape) - len(logical)
+    if n_extra < 0:  # tensor smaller than rule (e.g. bias matched by w-rule)
+        return P()
+    spec = [None] * n_extra
+    used = set()
+    for size, name in zip(shape[n_extra:], logical):
+        ax = None
+        if name in _MODEL_DIMS and "model" not in used:
+            a_sz = mesh.shape["model"]
+            if size % a_sz == 0 and _semantic_ok(name, cfg, a_sz):
+                ax = "model"
+        elif name == "d_model" and fsdp and "data" not in used:
+            a_sz = mesh.shape["data"]
+            if size % a_sz == 0:
+                ax = "data"
+        if ax:
+            used.add(ax)
+        spec.append(ax)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_like, cfg, mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree for a param(-shaped) tree."""
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        for pattern, logical in RULES:
+            if re.search(pattern, ps):
+                return _build_spec(logical, leaf.shape, cfg, mesh, fsdp)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_like)
+
+
+def param_shardings(params_like, cfg, mesh, *, fsdp: bool = False):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_like, cfg, mesh, fsdp=fsdp)
+    )
+
+
+def batch_specs(batch_like, mesh):
+    """Shard every batch leaf's leading dim over ("pod","data") when divisible."""
+
+    def spec_of(leaf):
+        axes = batch_axes_if_divisible(mesh, leaf.shape[0])
+        return P(axes) if axes else P()
+
+    return jax.tree_util.tree_map(spec_of, batch_like)
+
+
+def cache_specs(cache_like, cfg, mesh, batch_size: int, *, shard_hd: bool = False):
+    """Decode caches: batch dim on ("pod","data"), kv-head/ssm-head dims on
+    "model" when the semantic unit divides. Caches are stacked (layer-leading)
+    pytrees; the batch dim is located by exact size match, integer leaves
+    (slot-position buffers) stay replicated.
+
+    ``shard_hd``: when the kv-head count does NOT divide the model axis
+    (GQA with few kv heads), shard the trailing head_dim/channel dim instead —
+    the QKᵀ contraction then runs as partial sums + a small logits all-reduce
+    rather than all-gathering the cache (§Perf pair B)."""
+    KV = cfg.n_kv_heads
+    ssm_h = cfg.ssm_n_heads if cfg.ssm_state else -1
+    m = mesh.shape["model"]
+
+    def spec_of(path, leaf):
+        del path
+        shape = leaf.shape
+        if jax.numpy.issubdtype(leaf.dtype, jax.numpy.integer):
+            return P()
+        spec = [None] * len(shape)
+        b_dim = next((i for i, s in enumerate(shape) if s == batch_size), None)
+        used_model = False
+        for i, s in enumerate(shape):
+            if i == b_dim:
+                continue
+            if not used_model and ((s == KV and KV % m == 0) or (s == ssm_h and ssm_h % m == 0)):
+                spec[i] = "model"
+                used_model = True
+        if shard_hd and not used_model and len(shape) >= 3:
+            last = len(shape) - 1
+            if last != b_dim and shape[last] % m == 0:
+                spec[last] = "model"
+                used_model = True
+        if b_dim is not None:
+            spec[b_dim] = batch_axes_if_divisible(mesh, batch_size)
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_like)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

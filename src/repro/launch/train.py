@@ -1,0 +1,118 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --solver bicgstab --steps 20
+
+Runs the distributed HF optimizer (or a first-order baseline) on synthetic
+LM data, with checkpointing and metric logging. ``--smoke`` selects the
+reduced config (CPU-runnable); without it the full config is used (TPU).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..configs import ARCH_IDS, HFOptConfig, get_config, get_smoke_config
+from ..data import lm_batch
+from ..models import build_model
+from ..optim import make_optimizer
+
+
+def train(
+    arch: str,
+    *,
+    smoke: bool = True,
+    solver: str = "bicgstab",
+    steps: int = 20,
+    batch_size: int = 8,
+    seq_len: int = 64,
+    lr: float = 0.1,
+    hvp_batch_frac: float = 0.25,
+    max_cg_iters: int = 8,
+    precondition: bool = False,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    log_fn=print,
+):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = build_model(cfg)
+    opt_cfg = HFOptConfig(
+        name=solver, lr=lr, hvp_batch_frac=hvp_batch_frac,
+        max_cg_iters=max_cg_iters, precondition=precondition,
+    )
+    opt = make_optimizer(
+        opt_cfg, model.loss_fn, model_out_fn=model.logits_fn,
+        out_loss_fn=model.out_loss_fn,
+    )
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    state = opt.init(params)
+    start = 0
+    if ckpt_dir:
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            params, state, meta = restore_checkpoint(ckpt_dir, last, params, state)
+            start = meta["step"]
+            log_fn(f"restored checkpoint at step {start}")
+
+    step_fn = jax.jit(opt.step)
+    history = []
+    for i in range(start, steps):
+        batch = lm_batch(jax.random.fold_in(key, 1000 + i), cfg, batch_size, seq_len)
+        t0 = time.time()
+        params, state, metrics = step_fn(params, state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["step"] = i
+        metrics["wall_s"] = round(time.time() - t0, 3)
+        history.append(metrics)
+        log_fn(
+            f"step {i:4d} loss {metrics['loss']:.4f} |g| {metrics['grad_norm']:.3f}"
+            + (f" λ {metrics['lambda']:.3g} α {metrics['alpha']:.2f} cg {metrics['cg_iters']:.0f}"
+               if "lambda" in metrics else "")
+        )
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, i + 1, params, state)
+    return params, state, history
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--solver", default="bicgstab",
+                    choices=["sgd", "momentum", "adam", "gn_cg", "hessian_cg",
+                             "hybrid_cg", "bicgstab"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--max-cg-iters", type=int, default=8)
+    ap.add_argument("--precondition", action="store_true",
+                    help="Jacobi PCG for the CG-family solvers")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--history-out", default=None)
+    args = ap.parse_args()
+
+    _, _, history = train(
+        args.arch, smoke=args.smoke, solver=args.solver, steps=args.steps,
+        batch_size=args.batch_size, seq_len=args.seq_len, lr=args.lr,
+        max_cg_iters=args.max_cg_iters, precondition=args.precondition,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    if args.history_out:
+        os.makedirs(os.path.dirname(args.history_out) or ".", exist_ok=True)
+        with open(args.history_out, "w") as f:
+            json.dump(history, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model substrate: scanned-block transformers for all assigned families,
+plus the paper's own MLP classifiers."""
+from .transformer import ModelApi, build_model, build_encdec_model
+from .mlp import MLPApi, build_mlp
+
+__all__ = ["ModelApi", "build_model", "build_encdec_model", "MLPApi", "build_mlp"]

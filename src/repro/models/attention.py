@@ -1,0 +1,193 @@
+"""GQA attention: training/prefill (full-sequence) and single-token decode
+against a rolling KV cache (bounded by the sliding window when configured).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, H * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(k2, d, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(k3, d, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(k4, H * hd, d, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _sdpa(q, k, v, mask):
+    """q:(B,S,H,hd) k,v:(B,T,KV,hd) mask:(B|1,1,S,T) -> (B,S,H,hd).
+
+    GQA: H queries share H/KV kv-heads; computed grouped to avoid
+    materializing repeated K/V.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    # Keep K/V in their storage dtype (casting a 32k-deep decode cache to f32
+    # would double-materialize it in HBM); accumulate the contractions in f32.
+    logits = jnp.einsum(
+        "bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32
+    )
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    logits = logits + jnp.where(mask[:, :, None], 0.0, NEG_INF)  # mask:(B|1,1|KV,S,T)->(.. ,1,S,T)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgst,btkh->bskgh", w.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def causal_mask(S, T=None, *, window: Optional[int] = None, offset: int = 0):
+    """(1, 1, S, T) boolean; query i attends keys j with j ≤ i+offset and
+    (no window) or j > i+offset-window."""
+    T = T if T is not None else S
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = jnp.logical_and(m, kj > qi - window)
+    return m[None, None]
+
+
+def attend_full(p, x, positions, cfg, *, mask=None, cross_kv=None):
+    """Training/prefill attention. x:(B,S,d). Returns (B,S,d).
+
+    ``cross_kv=(k_src, v_src)`` turns this into cross-attention (no mask,
+    no RoPE on source side — whisper style).
+    """
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    B, S, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    if cross_kv is None:
+        k = _split_heads(dense(p["wk"], x), KV, hd)
+        v = _split_heads(dense(p["wv"], x), KV, hd)
+        q = apply_rope(q, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        if mask is None:
+            mask = causal_mask(S, window=cfg.sliding_window)
+    else:
+        k, v = cross_kv
+        if mask is None:
+            mask = jnp.ones((1, 1, S, k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask)
+    return dense(p["wo"], out.reshape(B, S, H * hd))
+
+
+def encoder_attend(p, x, cfg):
+    """Bidirectional self-attention (whisper encoder): no mask, no RoPE."""
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    B, S, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k = _split_heads(dense(p["wk"], x), KV, hd)
+    v = _split_heads(dense(p["wv"], x), KV, hd)
+    out = _sdpa(q, k, v, jnp.ones((1, 1, S, S), bool))
+    return dense(p["wo"], out.reshape(B, S, H * hd))
+
+
+# ------------------------------------------------------------- KV cache ----
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, W, KV, hd) — rolling window buffer
+    v: jax.Array        # (B, W, KV, hd)
+    pos: jax.Array      # (W,) absolute position stored in each slot (-1 empty)
+
+    @property
+    def window(self):
+        return self.k.shape[1]
+
+
+def init_kv_cache(cfg, batch, max_len, dtype) -> KVCache:
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, W, KV, hd), dtype),
+        v=jnp.zeros((batch, W, KV, hd), dtype),
+        pos=jnp.full((W,), -1, jnp.int32),
+    )
+
+
+def attend_full_with_cache(p, x, positions, cfg, max_len, dtype=None):
+    """Prefill: full-sequence causal attention that also returns the KV cache
+    (rolling layout: absolute position p lives in slot p % W). Uses the
+    Pallas flash-attention kernel when ``cfg.use_flash_attention`` and the
+    sequence is block-aligned (serving path; forward-only kernel)."""
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    B, S, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k = _split_heads(dense(p["wk"], x), KV, hd)
+    v = _split_heads(dense(p["wv"], x), KV, hd)
+    q = apply_rope(q, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    if cfg.use_flash_attention and S % 128 == 0:
+        from ..kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    else:
+        mask = causal_mask(S, window=cfg.sliding_window)
+        out = _sdpa(q, k, v, mask)
+    y = dense(p["wo"], out.reshape(B, S, H * hd))
+
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    keep = min(S, W)
+    pos_kept = positions[S - keep:]
+    slots = jnp.mod(pos_kept, W)
+    cache = KVCache(
+        k=jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k[:, S - keep:]),
+        v=jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v[:, S - keep:]),
+        pos=jnp.full((W,), -1, jnp.int32).at[slots].set(pos_kept),
+    )
+    return y, cache
+
+
+def decode_attend(p, x, t, cache: KVCache, cfg):
+    """One-token decode. x:(B,1,d); t: scalar absolute position of this token.
+
+    Writes (k,v) for position t into slot t % W and attends over every valid
+    slot (absolute position in (t-window, t]).
+    """
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    B = x.shape[0]
+    W = cache.window
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k = _split_heads(dense(p["wk"], x), KV, hd)
+    v = _split_heads(dense(p["wv"], x), KV, hd)
+    pos_t = jnp.full((1,), t, jnp.int32)
+    q = apply_rope(q, pos_t, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, pos_t, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    slot = jnp.mod(t, W)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(cache.pos, pos_t, slot, axis=0)
+    valid = jnp.logical_and(new_pos >= 0, new_pos <= t)
+    if cfg.sliding_window:
+        valid = jnp.logical_and(valid, new_pos > t - cfg.sliding_window)
+    mask = valid[None, None, None, :]                      # (1,1,1,W)
+    out = _sdpa(q, new_k, new_v, mask)
+    y = dense(p["wo"], out.reshape(B, 1, H * hd))
+    return y, KVCache(new_k, new_v, new_pos)
+
+
+def decode_cross_attend(p, x, cross_kv, cfg):
+    """Decode-time cross attention against fixed encoder K/V."""
+    hd, H = cfg.resolved_head_dim, cfg.n_heads
+    B = x.shape[0]
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k, v = cross_kv
+    mask = jnp.ones((1, 1, 1, k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask)
+    return dense(p["wo"], out.reshape(B, 1, H * hd))

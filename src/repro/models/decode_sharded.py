@@ -1,0 +1,93 @@
+"""Sequence-sharded decode attention (flash-decode) via shard_map.
+
+For single-sequence long-context decode (long_500k: batch=1) neither the
+batch dim nor a small kv-head count can shard the KV cache, and GSPMD's only
+automatic option is to replicate/gather it. The right manual schedule shards
+the cache's *sequence slots* across the model axis: every chip attends over
+its local slots and the partials merge with a numerically-stable logsumexp
+combine — two tiny all-reduces of (B,H)-shaped stats + one (B,H,hd) partial
+sum, instead of moving the cache.
+
+This is a beyond-paper serving optimization (the paper trains MLPs); it
+composes with the rolling-buffer semantics because slot position p % W maps
+each chip to an interleaved slice of positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .attention import KVCache, _split_heads
+from .layers import apply_rope, dense
+
+NEG_INF = -1e30
+
+
+def sharded_decode_attend(p, x, t, cache: KVCache, cfg, mesh, *, axis="model"):
+    """One-token decode with the cache's W dim sharded over ``axis``.
+
+    x: (B,1,d); cache.k/v: (B,W,KV,hd) sharded P(None, axis, None, None);
+    cache.pos: (W,) sharded P(axis). Returns (y: (B,1,d), new cache).
+    """
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    B = x.shape[0]
+    W = cache.window
+    n_shards = mesh.shape[axis]
+    assert W % n_shards == 0, (W, n_shards)
+
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k = _split_heads(dense(p["wk"], x), KV, hd)
+    v = _split_heads(dense(p["wv"], x), KV, hd)
+    pos_t = jnp.full((1,), t, jnp.int32)
+    q = apply_rope(q, pos_t, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, pos_t, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(None, axis, None, None), P(None, axis, None, None), P(axis)),
+        out_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P(axis)),
+    )
+    def attend(q, k_new, v_new, k_sh, v_sh, pos_sh):
+        # local slot index of the global rolling slot t % W, if it lands here
+        Wl = k_sh.shape[1]
+        shard_id = jax.lax.axis_index(axis)
+        slot_global = jnp.mod(t, W)
+        slot_local = slot_global - shard_id * Wl
+        mine = jnp.logical_and(slot_local >= 0, slot_local < Wl)
+        sl = jnp.clip(slot_local, 0, Wl - 1)
+        k_upd = jax.lax.dynamic_update_slice_in_dim(k_sh, k_new, sl, axis=1)
+        v_upd = jax.lax.dynamic_update_slice_in_dim(v_sh, v_new, sl, axis=1)
+        pos_upd = jax.lax.dynamic_update_slice_in_dim(pos_sh, pos_t, sl, axis=0)
+        k_sh = jnp.where(mine, k_upd, k_sh)
+        v_sh = jnp.where(mine, v_upd, v_sh)
+        pos_sh = jnp.where(mine, pos_upd, pos_sh)
+
+        valid = jnp.logical_and(pos_sh >= 0, pos_sh <= t)
+        if cfg.sliding_window:
+            valid = jnp.logical_and(valid, pos_sh > t - cfg.sliding_window)
+        G = H // KV
+        qg = q.reshape(B, 1, KV, G, hd)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qg, k_sh,
+                            preferred_element_type=jnp.float32)
+        logits = logits / jnp.sqrt(hd) + jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+        m_loc = jnp.max(logits, axis=-1)                       # (B,KV,G,1)
+        m_glob = jax.lax.pmax(m_loc, axis)
+        m_safe = jnp.where(m_glob <= NEG_INF / 2, 0.0, m_glob)
+        e = jnp.exp(logits - m_safe[..., None])
+        e = jnp.where(valid[None, None, None, None, :], e, 0.0)
+        s_loc = jnp.sum(e, axis=-1)                            # (B,KV,G,1)
+        o_loc = jnp.einsum("bkgst,btkh->bskgh", e.astype(v_sh.dtype), v_sh,
+                           preferred_element_type=jnp.float32)
+        s = jax.lax.psum(s_loc, axis)
+        o = jax.lax.psum(o_loc, axis)
+        out = o / jnp.maximum(s, 1e-20).transpose(0, 3, 1, 2)[..., None]
+        return out.reshape(B, 1, H * hd).astype(q.dtype), k_sh, v_sh, pos_sh
+
+    out, new_k, new_v, new_pos = attend(q, k, v, cache.k, cache.v, cache.pos)
+    y = dense(p["wo"], out)
+    return y, KVCache(new_k, new_v, new_pos)

@@ -1,0 +1,55 @@
+"""The paper's own networks: fully-connected classifiers (MNIST 784-400-10,
+TIMIT 360-512x3-1973, and the Fig. 4 network 784-400-150-10).
+
+Exposes the same (loss_fn, logits_fn, out_loss_fn) split the HF optimizer
+needs for its Gauss-Newton variants.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class MLPApi(NamedTuple):
+    init: callable
+    loss_fn: callable
+    logits_fn: callable
+    out_loss_fn: callable
+    accuracy: callable
+
+
+def build_mlp(layer_dims: Sequence[int], activation: str = "tanh") -> MLPApi:
+    """layer_dims = (in, hidden..., n_classes). Batch: {"x": (B,D), "y": (B,) int}."""
+    act = {"tanh": jnp.tanh, "relu": jax.nn.relu, "sigmoid": jax.nn.sigmoid}[activation]
+
+    def init(key):
+        params = []
+        keys = jax.random.split(key, len(layer_dims) - 1)
+        for k, din, dout in zip(keys, layer_dims[:-1], layer_dims[1:]):
+            params.append({
+                "w": jax.random.normal(k, (din, dout)) * jnp.sqrt(1.0 / din),
+                "b": jnp.zeros((dout,)),
+            })
+        return params
+
+    def logits_fn(params, batch):
+        h = batch["x"]
+        for layer in params[:-1]:
+            h = act(h @ layer["w"] + layer["b"])
+        return h @ params[-1]["w"] + params[-1]["b"]
+
+    def out_loss_fn(logits, batch):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.mean(nll)
+
+    def loss_fn(params, batch):
+        return out_loss_fn(logits_fn(params, batch), batch)
+
+    def accuracy(params, batch):
+        pred = jnp.argmax(logits_fn(params, batch), axis=-1)
+        return jnp.mean((pred == batch["y"]).astype(jnp.float32))
+
+    return MLPApi(init, loss_fn, logits_fn, out_loss_fn, accuracy)

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with GShard/Switch capacity-based einsum dispatch.
+
+Tokens are regrouped to ``(groups, group_len)`` with per-group expert capacity
+C = ceil(group_len·k·cap/E), so dispatch memory is O(T·E·C) with C bounded by
+the group length, not the global token count (the GShard trick). Groups are
+formed *within* each batch row, so the leading dim keeps the batch's
+("pod","data") sharding and the expert dimension can live on the "model" axis
+— the dispatch/combine einsums then lower to all-to-all-style collectives,
+which is the TPU-native form of expert parallelism.
+
+Top-k routing: k-th choices queue behind (k-1)-th (Switch priority). Overflow
+tokens are dropped; underflow slots are zeros. Aux load-balance loss follows
+Switch (E · Σ_e fraction_e · mean_prob_e / k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp_init, apply_mlp, dense_init
+
+MOE_GROUP_LEN = 256
+
+
+def _hint(x, *tail):
+    """Best-effort sharding constraint: leading dim on the batch/data axes,
+    trailing dims per ``tail``. No-op outside a mesh context."""
+    from jax.sharding import PartitionSpec as P
+
+    for data_axes in (("pod", "data"), ("data",)):
+        try:
+            return jax.lax.with_sharding_constraint(x, P(data_axes, *tail))
+        except (ValueError, KeyError, NameError, TypeError):
+            continue
+    return x
+
+
+def moe_init(key, cfg, dtype):
+    k_r, k_e = jax.random.split(key)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    experts = jax.vmap(lambda k: mlp_init(k, d, f, dtype, act=cfg.mlp_act))(
+        jax.random.split(k_e, E)
+    )
+    return {"router": dense_init(k_r, d, E, dtype), "experts": experts}
+
+
+def group_len_for(S: int) -> int:
+    gl = min(MOE_GROUP_LEN, S)
+    while S % gl:
+        gl -= 1
+    return gl
+
+
+def capacity(cfg, group_len: int) -> int:
+    return max(int(cfg.capacity_factor * cfg.top_k * group_len / cfg.n_experts), 1)
+
+
+def apply_moe(p, x, cfg):
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    gl = group_len_for(S)
+    C = capacity(cfg, gl)
+    G = B * (S // gl)
+    xg = x.reshape(G, gl, d)
+
+    logits = (xg @ p["router"]["w"].astype(xg.dtype)).astype(jnp.float32)  # (G,gl,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                          # (G,gl,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Position-in-expert: cumsum in (k-major, token) order per group/expert.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)                # (G,gl,K,E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * gl, E)              # k-priority
+    pos = jnp.cumsum(flat, axis=1) * flat - flat                           # 0-based
+    pos = pos.reshape(G, K, gl, E).transpose(0, 2, 1, 3)                   # (G,gl,K,E)
+    keep = (pos < C) * onehot
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32) * keep[..., None]  # (G,gl,K,E,C)
+    dispatch = jnp.sum(slot, axis=2)                                       # (G,gl,E,C)
+    combine = jnp.sum(slot * gate_vals[..., None, None], axis=2)           # (G,gl,E,C)
+    if cfg.shard_hints:
+        dispatch = _hint(dispatch, None, None, None)
+        combine = _hint(combine, None, None, None)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(xg.dtype), xg)
+    E_, G_, C_, _ = expert_in.shape
+    expert_in = expert_in.reshape(E_, G_ * C_, d)
+    if cfg.shard_hints:
+        # tokens stay data-sharded through the expert compute; the expert dim
+        # stays whole (all-to-all emerges at the dispatch boundary instead of
+        # replicating the one-hot tensors).
+        from jax.sharding import PartitionSpec as P
+        for data_axes in (("pod", "data"), ("data",)):
+            try:
+                expert_in = jax.lax.with_sharding_constraint(
+                    expert_in, P(None, data_axes, None))
+                break
+            except (ValueError, KeyError, NameError, TypeError):
+                continue
+    expert_out = jax.vmap(apply_mlp)(p["experts"], expert_in)              # (E,G*C,d)
+    expert_out = expert_out.reshape(E_, G_, C_, d)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(xg.dtype), expert_out)
+
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))                  # (E,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mean_prob) / K
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,207 @@
+"""Mamba2 / SSD blocks: chunkwise-parallel selective state space.
+
+The SSD recurrence  S_t = a_t·S_{t-1} + B_t u_tᵀ,  y_t = C_tᵀ S_t + D·x_t
+is evaluated in the chunked form (Mamba2 paper §6): intra-chunk terms as a
+Q×Q masked-decay "attention" matmul (MXU-friendly), inter-chunk terms via an
+associative scan over per-chunk summary states. This is the TPU-native
+adaptation — time-sequential scans would serialize 4k-500k steps, while the
+chunked form is O(L·Q) matmul work plus an O(L/Q) scan.
+
+``ssd_chunked`` is shared by the Mamba2 block (zamba2) and the mLSTM block
+(xlstm): mLSTM *is* this recurrence with B=k, C=q, u=i·v, a=σ(f).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_norm, dense, dense_init, norm_init
+
+
+def ssd_chunked(u, log_a, Bv, Cv, chunk: int, h0=None):
+    """Chunked SSD.
+
+    u:     (B, L, H, P)  decay-free inputs (dt·x or i·v), fp32 recommended
+    log_a: (B, L, H)     per-step log decay (dt·A or logσ(f)), ≤ 0
+    Bv:    (B, L, N) shared across heads, or (B, L, H, N) per-head
+    Cv:    same convention as Bv
+    h0:    (B, H, N, P) initial state or None
+    Returns (y: (B, L, H, P), h_final: (B, H, N, P)).
+    """
+    Bb, L, H, P = u.shape
+    per_head = Bv.ndim == 4
+    N = Bv.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc, Q = L // chunk, chunk
+
+    u = u.reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+    la = log_a.reshape(Bb, nc, Q, H).astype(jnp.float32)
+    if per_head:
+        Br = Bv.reshape(Bb, nc, Q, H, N).astype(jnp.float32)
+        Cr = Cv.reshape(Bb, nc, Q, H, N).astype(jnp.float32)
+    else:
+        Br = Bv.reshape(Bb, nc, Q, N).astype(jnp.float32)
+        Cr = Cv.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    l = jnp.cumsum(la, axis=2)                                   # inclusive (B,nc,Q,H)
+    # --- intra-chunk: masked decay attention ---------------------------------
+    rel = l[:, :, :, None, :] - l[:, :, None, :, :]              # l_i - l_j (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    if per_head:
+        scores = jnp.einsum("bcihn,bcjhn->bcijh", Cr, Br)
+    else:
+        scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * decay, u)
+
+    # --- per-chunk summary states -------------------------------------------
+    s_decay = jnp.exp(l[:, :, -1:, :] - l)                       # exp(l_Q - l_j)
+    uw = u * s_decay[..., None]
+    if per_head:
+        S = jnp.einsum("bcjhn,bcjhp->bchnp", Br, uw)
+    else:
+        S = jnp.einsum("bcjn,bcjhp->bchnp", Br, uw)
+    g = jnp.exp(l[:, :, -1, :])                                  # chunk decay (B,nc,H)
+
+    # --- inter-chunk associative scan ----------------------------------------
+    def combine(left, right):
+        g_l, s_l = left
+        g_r, s_r = right
+        return g_l * g_r, g_r[..., None, None] * s_l + s_r
+
+    g_scan, S_scan = jax.lax.associative_scan(combine, (g, S), axis=1)
+    if h0 is not None:
+        h0 = h0.astype(jnp.float32)
+        cumg = jnp.exp(jnp.cumsum(jnp.log(jnp.maximum(g, 1e-38)), axis=1))
+        S_scan = S_scan + cumg[..., None, None] * h0[:, None]
+    h_final = S_scan[:, -1]
+    h_prev = jnp.concatenate(
+        [h0[:, None] if h0 is not None else jnp.zeros_like(S_scan[:, :1]), S_scan[:, :-1]],
+        axis=1,
+    )                                                            # state entering chunk c
+
+    # --- inter-chunk contribution --------------------------------------------
+    if per_head:
+        y_inter = jnp.einsum("bcihn,bchnp->bcihp", Cr, h_prev)
+    else:
+        y_inter = jnp.einsum("bcin,bchnp->bcihp", Cr, h_prev)
+    y_inter = y_inter * jnp.exp(l)[..., None]
+    y = (y_intra + y_inter).reshape(Bb, L, H, P)
+    return y, h_final
+
+
+def ssd_step(u_t, log_a_t, B_t, C_t, state):
+    """Single-token SSD recurrence (decode).
+
+    u_t: (B,H,P), log_a_t: (B,H), B_t/C_t: (B,N) or (B,H,N), state: (B,H,N,P).
+    """
+    a = jnp.exp(log_a_t.astype(jnp.float32))[..., None, None]
+    if B_t.ndim == 2:
+        outer = jnp.einsum("bn,bhp->bhnp", B_t.astype(jnp.float32), u_t.astype(jnp.float32))
+    else:
+        outer = jnp.einsum("bhn,bhp->bhnp", B_t.astype(jnp.float32), u_t.astype(jnp.float32))
+    new_state = a * state + outer
+    if C_t.ndim == 2:
+        y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), new_state)
+    else:
+        y = jnp.einsum("bhn,bhnp->bhp", C_t.astype(jnp.float32), new_state)
+    return y, new_state
+
+
+# ------------------------------------------------------------ Mamba2 block --
+class MambaCache(NamedTuple):
+    conv: jax.Array      # (B, K-1, d_conv_in) rolling conv inputs
+    state: jax.Array     # (B, H, N, P) SSD state
+
+
+def mamba_init(key, cfg, dtype):
+    d, din, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_in = din + 2 * N
+    return {
+        "in_proj": dense_init(k1, d, 2 * din + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_in)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_in,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),                 # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),          # softplus ≈ 0.13
+        "gate_norm": norm_init(din, dtype),
+        "out_proj": dense_init(k3, din, d, dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    z, xBC, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, kernel K, over (B, L, Cin)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def apply_mamba(p, x, cfg, h0=None, conv0=None):
+    """x: (B, L, d) -> (y, MambaCache). Full-sequence (train/prefill)."""
+    B_, L, d = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    zxbcdt = dense(p["in_proj"], x)
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+    if conv0 is not None:
+        xBC_in = jnp.concatenate([conv0, xBC], axis=1)[:, -(L + cfg.ssm_conv - 1):]
+        conv_out = _causal_conv(xBC_in, p["conv_w"], p["conv_b"])[:, -L:]
+    else:
+        conv_out = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xc, Bc, Cc = jnp.split(conv_out, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])        # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                               # (H,)
+    xh = xc.reshape(B_, L, H, P)
+    u = xh.astype(jnp.float32) * dt[..., None]
+    log_a = dt * A
+    chunk = cfg.ssm_chunk
+    if L % chunk:
+        chunk = 1 if L == 1 else next(c for c in range(min(chunk, L), 0, -1) if L % c == 0)
+    y, h_final = ssd_chunked(u, log_a, Bc, Cc, chunk, h0=h0)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, L, din).astype(x.dtype)
+    y = apply_norm(p["gate_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    conv_tail = (jnp.concatenate([conv0, xBC], axis=1) if conv0 is not None else xBC)[
+        :, -(cfg.ssm_conv - 1):
+    ]
+    return dense(p["out_proj"], y), MambaCache(conv_tail, h_final)
+
+
+def init_mamba_cache(cfg, batch, dtype) -> MambaCache:
+    din, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_n_heads, cfg.ssm_head_dim
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * N), dtype),
+        state=jnp.zeros((batch, H, N, P), jnp.float32),
+    )
+
+
+def mamba_decode_step(p, x, cache: MambaCache, cfg):
+    """x: (B, 1, d) -> (y: (B,1,d), cache)."""
+    B_ = x.shape[0]
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    zxbcdt = dense(p["in_proj"], x[:, 0])
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+    window = jnp.concatenate([cache.conv, xBC[:, None]], axis=1)           # (B,K,Cin)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    xc, Bc, Cc = jnp.split(conv_out, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])        # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(B_, H, P)
+    u = xh.astype(jnp.float32) * dt[..., None]
+    y, new_state = ssd_step(u, dt * A, Bc, Cc, cache.state)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, din).astype(x.dtype)
+    y = apply_norm(p["gate_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    y = dense(p["out_proj"], y)[:, None]
+    return y, MambaCache(window[:, 1:], new_state)

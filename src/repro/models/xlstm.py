@@ -1,0 +1,166 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory with block-diagonal recurrence).
+
+mLSTM is a gated linear-attention recurrence — exactly the SSD form with
+B=k/√dh, C=q, u=i·v and per-head scalar decay a=σ(f); we reuse
+``ssm.ssd_chunked`` for the chunkwise-parallel train/prefill path and
+``ssm.ssd_step`` for decode. The running normalizer n_t is carried as one
+extra value channel. Exponential gating is implemented in its
+sigmoid-normalized form (σ(i), σ(f)) — the max-stabilizer of the paper's
+exp-gating largely cancels in h = (C q)/max(|n q|, 1); noted in DESIGN.md.
+
+sLSTM is inherently sequential (recurrent h_{t-1} feeds the gates) and is run
+as a ``lax.scan`` over time — its config appears only in xlstm-1.3b where the
+sLSTM d_model is small.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_norm, dense, dense_init, norm_init
+from .ssm import ssd_chunked, ssd_step
+
+
+# ---------------------------------------------------------------- mLSTM ----
+class MLstmCache(NamedTuple):
+    state: jax.Array     # (B, H, dh, dh+1) — matrix memory + normalizer col
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wi": dense_init(ks[3], d, H, dtype, bias=True),
+        "wf": dense_init(ks[4], d, H, dtype, bias=True),
+        "out_norm": norm_init(d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+    }
+
+
+def _mlstm_qkv(p, x, cfg):
+    B, L, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q = dense(p["wq"], x).reshape(B, L, H, dh)
+    k = dense(p["wk"], x).reshape(B, L, H, dh) / jnp.sqrt(dh)
+    v = dense(p["wv"], x).reshape(B, L, H, dh)
+    i_gate = jax.nn.sigmoid(dense(p["wi"], x).astype(jnp.float32))        # (B,L,H)
+    log_f = jax.nn.log_sigmoid(dense(p["wf"], x).astype(jnp.float32))     # (B,L,H)
+    return q, k, v, i_gate, log_f
+
+
+def _mlstm_read(y_ext, dh):
+    y = y_ext[..., :dh] / jnp.maximum(jnp.abs(y_ext[..., dh:]), 1.0)
+    return y
+
+
+def apply_mlstm(p, x, cfg, h0=None):
+    """x: (B,L,d) -> (y: (B,L,d), MLstmCache)."""
+    B, L, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q, k, v, i_gate, log_f = _mlstm_qkv(p, x, cfg)
+    ones = jnp.ones((B, L, H, 1), v.dtype)
+    u = jnp.concatenate([v, ones], axis=-1) * i_gate[..., None]            # (B,L,H,dh+1)
+    chunk = cfg.ssm_chunk
+    if L % chunk:
+        chunk = 1 if L == 1 else next(c for c in range(min(chunk, L), 0, -1) if L % c == 0)
+    y_ext, h_final = ssd_chunked(u, log_f, k, q, chunk, h0=h0)
+    y = _mlstm_read(y_ext, dh).reshape(B, L, d).astype(x.dtype)
+    y = apply_norm(p["out_norm"], y, cfg.norm_eps)
+    return dense(p["wo"], y), MLstmCache(h_final)
+
+
+def init_mlstm_cache(cfg, batch) -> MLstmCache:
+    dh = cfg.d_model // cfg.n_heads
+    return MLstmCache(jnp.zeros((batch, cfg.n_heads, dh, dh + 1), jnp.float32))
+
+
+def mlstm_decode_step(p, x, cache: MLstmCache, cfg):
+    B = x.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    q, k, v, i_gate, log_f = _mlstm_qkv(p, x, cfg)
+    u = jnp.concatenate([v[:, 0], jnp.ones((B, H, 1), v.dtype)], axis=-1) * i_gate[:, 0, :, None]
+    y_ext, new_state = ssd_step(u, log_f[:, 0], k[:, 0], q[:, 0], cache.state)
+    y = _mlstm_read(y_ext, dh).reshape(B, 1, cfg.d_model).astype(x.dtype)
+    y = apply_norm(p["out_norm"], y, cfg.norm_eps)
+    return dense(p["wo"], y), MLstmCache(new_state)
+
+
+# ---------------------------------------------------------------- sLSTM ----
+class SLstmCache(NamedTuple):
+    c: jax.Array    # (B, H, dh)
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": (jax.random.normal(k1, (d, 4, H, dh)) / jnp.sqrt(d)).astype(dtype),
+        "r": (jax.random.normal(k2, (H, dh, 4, dh)) / jnp.sqrt(dh) * 0.5).astype(dtype),
+        "b": jnp.zeros((4, H, dh), dtype),
+        "wo": dense_init(k3, d, d, dtype),
+    }
+
+
+def _slstm_cell(p, pre_x, state: SLstmCache):
+    """pre_x: (B,4,H,dh) input preactivations for one step."""
+    c, n, m, h = state
+    rec = jnp.einsum("bhd,hdge->bghe", h.astype(jnp.float32), p["r"].astype(jnp.float32))
+    pre = pre_x.astype(jnp.float32) + rec                                  # (B,4,H,dh)
+    i_t, f_t, z_t, o_t = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    m_new = jnp.maximum(f_t + m, i_t)                                      # stabilizer
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLstmCache(c_new, n_new, m_new, h_new)
+
+
+def apply_slstm(p, x, cfg, state: SLstmCache | None = None):
+    """x: (B,L,d) -> (y, SLstmCache). Sequential lax.scan over time."""
+    B, L, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    if state is None:
+        state = init_slstm_cache(cfg, B)
+    pre_x = jnp.einsum("bld,dghe->blghe", x, p["w"]) + p["b"]              # (B,L,4,H,dh)
+
+    def step(carry, pre_t):
+        new = _slstm_cell(p, pre_t, carry)
+        return new, new.h
+
+    final, hs = jax.lax.scan(step, state, pre_x.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, L, d).astype(x.dtype)
+    return dense(p["wo"], y), final
+
+
+def init_slstm_cache(cfg, batch) -> SLstmCache:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return SLstmCache(z, z, jnp.full_like(z, -1e9), z)
+
+
+def slstm_decode_step(p, x, cache: SLstmCache, cfg):
+    B = x.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    pre_x = jnp.einsum("bd,dghe->bghe", x[:, 0], p["w"]) + p["b"]
+    new = _slstm_cell(p, pre_x, cache)
+    y = new.h.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    return dense(p["wo"], y), new

@@ -1,0 +1,4 @@
+from .first_order import adam, momentum_sgd, sgd, FirstOrderOptimizer
+from .api import make_optimizer, Optimizer
+
+__all__ = ["adam", "momentum_sgd", "sgd", "FirstOrderOptimizer", "make_optimizer", "Optimizer"]

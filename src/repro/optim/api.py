@@ -1,0 +1,77 @@
+"""Unified optimizer interface: first-order baselines and the paper's HF
+variants behind one (init, step) surface, selected by HFOptConfig.name.
+
+HF steps take the full batch for gradient/line-search and slice a curvature
+mini-batch of ``hvp_batch_frac`` (paper Alg. 2: full gradient, mini-batch
+Hessian; Fig. 4 sweeps this size).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import HFOptConfig
+from ..core import HFConfig, hf_init, hf_step
+from .first_order import adam, momentum_sgd, sgd
+
+FIRST_ORDER = ("sgd", "momentum", "adam")
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable[[Any], Any]
+    step: Callable[..., tuple]  # (params, state, batch) -> (params, state, metrics)
+
+
+def _slice_batch(batch, frac: float):
+    """Leading-dim slice for the curvature mini-batch (static fraction)."""
+    if frac >= 1.0:
+        return batch
+
+    def cut(x):
+        n = max(int(x.shape[0] * frac), 1)
+        return x[:n]
+
+    return jax.tree_util.tree_map(cut, batch)
+
+
+def make_optimizer(
+    opt: HFOptConfig,
+    loss_fn,
+    model_out_fn=None,
+    out_loss_fn=None,
+) -> Optimizer:
+    if opt.name in FIRST_ORDER:
+        fo = {
+            "sgd": lambda: sgd(opt.lr),
+            "momentum": lambda: momentum_sgd(opt.lr, opt.momentum),
+            "adam": lambda: adam(opt.lr),
+        }[opt.name]()
+
+        def step(params, state, batch):
+            return fo.step(loss_fn, params, state, batch)
+
+        return Optimizer(opt.name, fo.init, step)
+
+    hf_cfg = HFConfig(
+        solver=opt.name,
+        max_cg_iters=opt.max_cg_iters,
+        cg_tol=opt.cg_tol,
+        init_damping=opt.init_damping,
+        cg_decay=opt.cg_decay,
+        precondition=opt.precondition,
+    )
+
+    def init(params):
+        return hf_init(params, hf_cfg)
+
+    def step(params, state, batch):
+        hvp_batch = _slice_batch(batch, opt.hvp_batch_frac)
+        return hf_step(
+            loss_fn, params, state, batch, hvp_batch, hf_cfg,
+            model_out_fn=model_out_fn, out_loss_fn=out_loss_fn,
+        )
+
+    return Optimizer(opt.name, init, step)

@@ -1,0 +1,71 @@
+"""First-order baselines the paper compares against: SGD, Momentum-SGD
+(Sutskever et al.), Adam. Pure (init, step) pairs over pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FirstOrderOptimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    step: Callable[..., tuple]   # (loss_fn, params, state, batch) -> (params, state, metrics)
+
+
+def _metrics(loss, g):
+    sq = sum(jnp.vdot(x.astype(jnp.float32), x.astype(jnp.float32))
+             for x in jax.tree_util.tree_leaves(g))
+    return {"loss": loss, "grad_norm": jnp.sqrt(sq)}
+
+
+def sgd(lr: float) -> FirstOrderOptimizer:
+    def init(params):
+        return ()
+
+    def step(loss_fn, params, state, batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        new = jax.tree_util.tree_map(lambda p, gg: p - lr * gg.astype(p.dtype), params, g)
+        return new, state, _metrics(loss, g)
+
+    return FirstOrderOptimizer(init, step)
+
+
+def momentum_sgd(lr: float, beta: float = 0.9) -> FirstOrderOptimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def step(loss_fn, params, state, batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        vel = jax.tree_util.tree_map(lambda v, gg: beta * v + gg.astype(v.dtype), state, g)
+        new = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, vel)
+        return new, vel, _metrics(loss, g)
+
+    return FirstOrderOptimizer(init, step)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> FirstOrderOptimizer:
+    class AdamState(NamedTuple):
+        m: Any
+        v: Any
+        t: jax.Array
+
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(z, z, jnp.zeros((), jnp.int32))
+
+    def step(loss_fn, params, state, batch):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        t = state.t + 1
+        m = jax.tree_util.tree_map(lambda mm, gg: b1 * mm + (1 - b1) * gg.astype(jnp.float32), state.m, g)
+        v = jax.tree_util.tree_map(lambda vv, gg: b2 * vv + (1 - b2) * jnp.square(gg.astype(jnp.float32)), state.v, g)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - (lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)).astype(p.dtype),
+            params, m, v,
+        )
+        return new, AdamState(m, v, t), _metrics(loss, g)
+
+    return FirstOrderOptimizer(init, step)

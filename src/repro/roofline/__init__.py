@@ -1,0 +1,12 @@
+from .analysis import (
+    HW,
+    collective_bytes_from_hlo,
+    cost_summary,
+    model_flops,
+    roofline_terms,
+)
+
+__all__ = [
+    "HW", "collective_bytes_from_hlo", "cost_summary", "model_flops",
+    "roofline_terms",
+]

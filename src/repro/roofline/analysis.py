@@ -1,0 +1,144 @@
+"""Roofline terms from compiled dry-run artifacts (no jax import needed).
+
+  compute    = HLO_FLOPs / (chips x peak_FLOPs)
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are parsed out of the HLO text: we sum the *result* shape bytes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (async `-start` forms counted once, `-done` ignored).
+Caveat (documented in EXPERIMENTS.md): XLA's cost analysis counts a
+while-loop body once, so for the HF step the terms are per-Krylov-iteration
+program cost; the per-outer-iteration cost multiplies the solver trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (per chip) — from the task brief.
+@dataclasses.dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # B/s
+    ici_bw: float = 50e9            # B/s per link
+    hbm_bytes: float = 16e9         # HBM capacity
+
+
+HW = _HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%x = bf16[8,128]{1,0} all-reduce(...)` (scalar result) and
+# `%x = (f32[8]{0}, f32[8]{0}) all-reduce-start(...)` (tuple result)
+_OP_SCALAR_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\]\S*\s+("
+    + "|".join(_COLLECTIVES)
+    + r")(-start)?\("
+)
+_OP_TUPLE_RE = re.compile(
+    r"=\s*\((.*?)\)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str, top_k: int = 5) -> Dict[str, int]:
+    """Sum result bytes per collective kind (plus 'total' and the ``top_k``
+    largest individual ops for diagnosis)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    tops = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _OP_SCALAR_RE.search(s)
+        if m:
+            dtype, dims, kind, _start = m.groups()
+            size = _shape_bytes(dtype, dims)
+            desc = f"{kind} {dtype}[{dims}]"
+        else:
+            m = _OP_TUPLE_RE.search(s)
+            if not m:
+                continue
+            shapes, kind, _start = m.groups()
+            found = _SHAPE_RE.findall(shapes)
+            size = sum(_shape_bytes(d, i) for d, i in found)
+            desc = f"{kind} tuple({len(found)})" + (
+                f" {found[0][0]}[{found[0][1]}]" if found else ""
+            )
+        out[kind] += size
+        count[kind] += 1
+        tops.append((size, desc))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    tops.sort(reverse=True)
+    out["top_ops"] = [f"{sz/2**30:.2f}GiB {desc}" for sz, desc in tops[:top_k]]
+    return out
+
+
+def cost_summary(cost_analysis) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() output (dict or list-of-dicts)."""
+    if cost_analysis is None:
+        return {}
+    props = cost_analysis[0] if isinstance(cost_analysis, (list, tuple)) else cost_analysis
+    return {
+        "flops": float(props.get("flops", 0.0)),
+        "bytes_accessed": float(props.get("bytes accessed", 0.0)),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-model FLOPs for the workload: 6·N·D train (N = active params for
+    MoE), 2·N·tokens decode/prefill-forward-only."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def active_param_count(cfg) -> int:
+    if cfg.n_experts and cfg.top_k:
+        full = cfg.param_count()
+        dense_like = cfg.replace(n_experts=cfg.top_k)  # only k experts active
+        return dense_like.param_count()
+    return cfg.param_count()
+
+
+def roofline_terms(
+    flops: float, bytes_accessed: float, collective_bytes: float, n_chips: int
+) -> Dict[str, float]:
+    """All inputs are PER-DEVICE quantities (XLA analyses the partitioned,
+    per-device module). flops·chips / (chips·peak) == flops/peak, so the
+    per-device form below is identical to the brief's global formula."""
+    compute = flops / HW.peak_flops
+    memory = bytes_accessed / HW.hbm_bw
+    collective = collective_bytes / HW.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    return terms

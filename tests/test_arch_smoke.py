@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests: reduced variant of each assigned family
+(2 layers, d_model<=512, <=4 experts) — one forward + one HF train step on
+CPU, asserting output shapes and no NaNs; plus prefill/decode consistency.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core import HFConfig, hf_init, hf_step
+from repro.data import lm_batch
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+def _setup(arch_id):
+    cfg = get_smoke_config(arch_id)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, B, S)
+    return cfg, model, params, batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_shapes_and_finite(arch_id):
+    cfg, model, params, batch = _setup(arch_id)
+    logits = model.logits_fn(params, batch)
+    assert logits.shape == batch["targets"].shape + (cfg.padded_vocab,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = model.loss_fn(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # a random model should sit near uniform CE
+    assert float(loss) < jnp.log(cfg.padded_vocab) * 2
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_one_hf_train_step(arch_id):
+    cfg, model, params, batch = _setup(arch_id)
+    hf_cfg = HFConfig(solver="bicgstab", max_cg_iters=3, max_backtracks=4)
+    state = hf_init(params, hf_cfg)
+    new_params, new_state, metrics = jax.jit(
+        lambda p, s, b: hf_step(model.loss_fn, p, s, b, b, hf_cfg)
+    )(params, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["loss_new"]))
+    assert float(metrics["loss_new"]) <= float(metrics["loss"]) + 1e-5
+    for a, b_ in zip(jax.tree_util.tree_leaves(new_params), jax.tree_util.tree_leaves(params)):
+        assert a.shape == b_.shape
+        assert bool(jnp.all(jnp.isfinite(a)))
+
+
+@pytest.mark.parametrize("arch_id", [a for a in ARCH_IDS if a != "whisper-small"])
+def test_prefill_decode_consistency(arch_id):
+    """decode_step after prefill(S-1 tokens) must reproduce the full-seq
+    logits at the last position (numerics: fp32 small models, tol 2e-2).
+
+    MoE archs are checked with a no-drop capacity factor (E/k): capacity
+    dropping is a *train-time* semantic — decode groups are single tokens and
+    never drop, so equivalence only holds in the no-drop regime."""
+    cfg, model, params, batch = _setup(arch_id)
+    if cfg.n_experts:
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts) / cfg.top_k + 1.0)
+        from repro.models import build_model as _bm
+        model = _bm(cfg)
+    full = model.logits_fn(params, batch)                  # (B, S_text, V)
+    s_text = batch["tokens"].shape[1]
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, : s_text - 1]
+    _, cache = model.prefill(params, pre_batch, max_len=S + 8)
+    t = jnp.asarray(s_text - 1 + (cfg.n_vision_tokens if cfg.family == "vlm" else 0))
+    logits, _ = model.decode_step(params, batch["tokens"][:, -1:], t, cache)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full[:, -1]), rtol=0.05, atol=2e-2
+    )
+
+
+def test_whisper_prefill_decode_consistency():
+    cfg, model, params, batch = _setup("whisper-small")
+    full = model.logits_fn(params, batch)
+    s = batch["tokens"].shape[1]
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, : s - 1]
+    _, cache = model.prefill(params, pre_batch, max_len=S + 8)
+    logits, _ = model.decode_step(params, batch["tokens"][:, -1:], jnp.asarray(s - 1), cache)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full[:, -1]), rtol=0.05, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_count_analytic_close(arch_id):
+    """Analytic param_count stays within 10% of the real tree (sanity for
+    roofline MODEL_FLOPS)."""
+    cfg = get_smoke_config(arch_id)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    real = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    est = cfg.param_count()
+    assert abs(est - real) / real < 0.15, (est, real)

@@ -1,0 +1,61 @@
+"""Free CG-backtracking: the solver returns the best-model iterate."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bicgstab, cg
+from repro.core.tree_math import tree_dot
+
+
+def _vec(x):
+    return {"x": jnp.asarray(x, jnp.float32)}
+
+
+def _mat_op(M):
+    return lambda v: {"x": M @ v["x"]}
+
+
+def _phi(M, b, x):
+    return 0.5 * float(x["x"] @ (M @ x["x"])) - float(b["x"] @ x["x"])
+
+
+def test_bicgstab_returns_best_model_iterate_indefinite():
+    """On an indefinite system Bi-CG-STAB's φ trajectory is non-monotone;
+    the returned iterate must have φ ≤ φ of every truncation point we can
+    reach by capping iterations."""
+    rng = np.random.RandomState(7)
+    d = np.concatenate([np.linspace(0.5, 4.0, 12), [-1.0, -0.3]]).astype(np.float32)
+    M = jnp.diag(jnp.asarray(d))
+    b = _vec(rng.randn(14))
+    phis = []
+    phis_final = []
+    for iters in range(1, 12):
+        res = bicgstab(_mat_op(M), b, _vec(np.zeros(14)), lam=0.0,
+                       max_iters=iters, tol=1e-12)
+        phis.append(_phi(M, b, res.x_best))
+        phis_final.append(_phi(M, b, res.x))
+    # best-so-far property: φ of x_best is non-increasing in budget
+    assert all(b2 <= a2 + 1e-4 for a2, b2 in zip(phis, phis[1:])), phis
+    # and dominates the final iterate at every budget
+    assert all(pb <= pf + 1e-4 for pb, pf in zip(phis, phis_final))
+
+
+def test_residual_consistent_with_returned_iterate():
+    rng = np.random.RandomState(0)
+    Q = rng.randn(10, 10).astype(np.float32)
+    M = jnp.asarray(Q @ Q.T + 10 * np.eye(10, dtype=np.float32))
+    b = _vec(rng.randn(10))
+    res = bicgstab(_mat_op(M), b, _vec(np.zeros(10)), lam=0.0, max_iters=40, tol=1e-8)
+    r_check = np.asarray(b["x"]) - np.asarray(M @ res.x["x"])
+    np.testing.assert_allclose(np.asarray(res.r["x"]), r_check, rtol=1e-3, atol=1e-4)
+
+
+def test_cg_best_equals_last_on_spd():
+    """CG minimizes φ over the growing Krylov space: best == last."""
+    rng = np.random.RandomState(1)
+    Q = rng.randn(8, 8).astype(np.float32)
+    M = jnp.asarray(Q @ Q.T + 8 * np.eye(8, dtype=np.float32))
+    b = _vec(rng.randn(8))
+    res = cg(_mat_op(M), b, _vec(np.zeros(8)), lam=0.0, max_iters=50, tol=1e-8)
+    np.testing.assert_allclose(
+        np.asarray(res.x["x"]), np.linalg.solve(np.asarray(M), b["x"]),
+        rtol=1e-3, atol=1e-4)

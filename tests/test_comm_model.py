@@ -1,0 +1,48 @@
+"""Paper §3 communication-model sanity checks."""
+import math
+
+from benchmarks.comm_model import (
+    dp_floats_per_epoch,
+    dp_syncs_per_epoch,
+    hf_syncs_per_iteration,
+    model_size,
+    mp_syncs_per_epoch,
+    sgd_syncs_per_epoch,
+    speedup_model,
+)
+
+
+def test_sgd_syncs_dominate_hf():
+    """Paper's core systems claim: per epoch, data-parallel SGD needs
+    n/(N·b)·2 reduces while HF needs ~1 + K + E."""
+    n, b, N = 60000, 64, 16
+    sgd = sgd_syncs_per_epoch(n, b, N)
+    hf = hf_syncs_per_iteration(cg_iters=10, ls_evals=3)
+    assert sgd / hf > 50  # order(s) of magnitude
+
+
+def test_model_parallel_syncs_exceed_data_parallel():
+    n, b, layers = 60000, 64, 4
+    assert mp_syncs_per_epoch(n, b, layers) > dp_syncs_per_epoch(n, b)
+
+
+def test_larger_batch_fewer_syncs():
+    assert dp_syncs_per_epoch(60000, 1024) < dp_syncs_per_epoch(60000, 64)
+
+
+def test_model_size_mnist():
+    assert model_size((784, 400, 10)) == 784 * 400 + 400 + 400 * 10 + 10
+
+
+def test_speedup_monotone_for_compute_bound():
+    sp = [speedup_model(N, compute_s_per_node_unit=10.0, bytes_per_sync=4e6,
+                        syncs=14) for N in (1, 2, 4, 8, 16)]
+    assert all(b > a for a, b in zip(sp, sp[1:]))
+
+
+def test_speedup_saturates_for_comm_bound():
+    """Tiny compute + many syncs (small batch): speedup flattens, the paper's
+    'small batch is the primary bottleneck for scaling'."""
+    sp32 = speedup_model(32, compute_s_per_node_unit=0.01, bytes_per_sync=4e6,
+                         syncs=1000)
+    assert sp32 < 2.0

@@ -1,0 +1,184 @@
+"""Unit tests for the Krylov solvers, HVP operators, damping and line search."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HFConfig, armijo, bicgstab, cg, fd_hvp, hf_init, hf_step,
+    lm_update, make_damped, make_gnvp, make_hvp, sign_correct,
+)
+from repro.core.tree_math import tree_dot, tree_norm, tree_scale, tree_sub
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _mat_op(M):
+    return lambda v: {"x": M @ v["x"]}
+
+
+def _vec(x):
+    return {"x": jnp.asarray(x, jnp.float32)}
+
+
+class TestCG:
+    def test_solves_spd_system(self):
+        rng = np.random.RandomState(0)
+        Q = rng.randn(8, 8).astype(np.float32)
+        M = Q @ Q.T + 8 * np.eye(8, dtype=np.float32)
+        b = _vec(rng.randn(8))
+        res = cg(_mat_op(jnp.asarray(M)), b, _vec(np.zeros(8)), lam=0.0, max_iters=50, tol=1e-6)
+        np.testing.assert_allclose(np.asarray(res.x["x"]), np.linalg.solve(M, b["x"]), rtol=1e-3, atol=1e-4)
+        assert not bool(res.nc_found)
+
+    def test_detects_negative_curvature(self):
+        M = jnp.diag(jnp.array([2.0, -1.0, 3.0], jnp.float32))
+        b = _vec([1.0, 1.0, 1.0])
+        res = cg(_mat_op(M), b, _vec(np.zeros(3)), lam=0.0, max_iters=20, tol=1e-8)
+        assert bool(res.nc_found)
+        d = np.asarray(res.nc_dir["x"])
+        assert d @ np.diag([2.0, -1.0, 3.0]) @ d < 0
+
+    def test_warm_start_converges_faster(self):
+        rng = np.random.RandomState(1)
+        Q = rng.randn(16, 16).astype(np.float32)
+        M = jnp.asarray(Q @ Q.T + 16 * np.eye(16, dtype=np.float32))
+        b = _vec(rng.randn(16))
+        x_star = {"x": jnp.linalg.solve(M, b["x"])}
+        cold = cg(_mat_op(M), b, _vec(np.zeros(16)), lam=0.0, max_iters=3, tol=1e-10)
+        warm = cg(_mat_op(M), b, tree_scale(0.95, x_star), lam=0.0, max_iters=3, tol=1e-10)
+        assert tree_norm(tree_sub(warm.x, x_star)) < tree_norm(tree_sub(cold.x, x_star))
+
+
+class TestBiCGSTAB:
+    def test_solves_spd_system(self):
+        rng = np.random.RandomState(2)
+        Q = rng.randn(8, 8).astype(np.float32)
+        M = Q @ Q.T + 8 * np.eye(8, dtype=np.float32)
+        b = _vec(rng.randn(8))
+        res = bicgstab(_mat_op(jnp.asarray(M)), b, _vec(np.zeros(8)), lam=0.0, max_iters=60, tol=1e-6)
+        np.testing.assert_allclose(np.asarray(res.x["x"]), np.linalg.solve(M, b["x"]), rtol=1e-3, atol=1e-4)
+
+    def test_solves_indefinite_system(self):
+        # This is the point of Alg. 3: CG cannot do this, Bi-CG-STAB can.
+        M = jnp.diag(jnp.array([4.0, -2.0, 1.0, -0.5], jnp.float32))
+        rng = np.random.RandomState(3)
+        b = _vec(rng.randn(4))
+        res = bicgstab(_mat_op(M), b, _vec(np.zeros(4)), lam=0.0, max_iters=60, tol=1e-6)
+        x_star = np.asarray(b["x"]) / np.array([4.0, -2.0, 1.0, -0.5])
+        np.testing.assert_allclose(np.asarray(res.x["x"]), x_star, rtol=1e-3, atol=1e-4)
+        assert bool(res.nc_found)
+        assert float(res.nc_curv) < 0
+
+    def test_nonsymmetric_system(self):
+        rng = np.random.RandomState(4)
+        M = rng.randn(6, 6).astype(np.float32) + 6 * np.eye(6, dtype=np.float32)
+        b = _vec(rng.randn(6))
+        res = bicgstab(_mat_op(jnp.asarray(M)), b, _vec(np.zeros(6)), lam=0.0, max_iters=100, tol=1e-6)
+        np.testing.assert_allclose(np.asarray(res.x["x"]), np.linalg.solve(M, b["x"]), rtol=1e-2, atol=1e-3)
+
+
+class TestHVP:
+    def _loss(self, params, batch):
+        x, y = batch
+        h = jnp.tanh(x @ params["w1"] + params["b1"])
+        z = h @ params["w2"]
+        return jnp.mean((z - y) ** 2) + 1e-3 * tree_dot(params, params)
+
+    def _setup(self):
+        rng = np.random.RandomState(5)
+        params = {
+            "w1": jnp.asarray(rng.randn(4, 8) * 0.3, jnp.float32),
+            "b1": jnp.zeros(8, jnp.float32),
+            "w2": jnp.asarray(rng.randn(8, 2) * 0.3, jnp.float32),
+        }
+        batch = (jnp.asarray(rng.randn(16, 4), jnp.float32), jnp.asarray(rng.randn(16, 2), jnp.float32))
+        v = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.1, params)
+        return params, batch, v
+
+    def test_exact_hvp_matches_finite_difference(self):
+        params, batch, v = self._setup()
+        hv = make_hvp(self._loss, params, batch)(v)
+        fd = fd_hvp(self._loss, params, batch, v, eps=1e-3)
+        for a, b in zip(jax.tree_util.tree_leaves(hv), jax.tree_util.tree_leaves(fd)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-2, atol=5e-3)
+
+    def test_hvp_is_symmetric(self):
+        params, batch, _ = self._setup()
+        hvp = make_hvp(self._loss, params, batch)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        u = jax.tree_util.tree_map(lambda p: jax.random.normal(k1, p.shape), params)
+        w = jax.tree_util.tree_map(lambda p: jax.random.normal(k2, p.shape), params)
+        np.testing.assert_allclose(float(tree_dot(u, hvp(w))), float(tree_dot(w, hvp(u))), rtol=1e-3)
+
+    def test_gnvp_is_psd(self):
+        params, batch, _ = self._setup()
+
+        def out_fn(p, b):
+            x, _ = b
+            return jnp.tanh(x @ p["w1"] + p["b1"]) @ p["w2"]
+
+        def out_loss(z, b):
+            return jnp.mean((z - b[1]) ** 2)
+
+        gn = make_gnvp(out_fn, out_loss, params, batch)
+        for seed in range(5):
+            v = jax.tree_util.tree_map(
+                lambda p: jax.random.normal(jax.random.PRNGKey(seed), p.shape), params
+            )
+            assert float(tree_dot(v, gn(v))) >= -1e-6
+
+    def test_gnvp_equals_hvp_for_linear_model(self):
+        # With a linear model, GN == exact Hessian for squared loss.
+        rng = np.random.RandomState(6)
+        params = {"w": jnp.asarray(rng.randn(4, 3) * 0.3, jnp.float32)}
+        batch = (jnp.asarray(rng.randn(8, 4), jnp.float32), jnp.asarray(rng.randn(8, 3), jnp.float32))
+
+        def out_fn(p, b):
+            return b[0] @ p["w"]
+
+        def out_loss(z, b):
+            return jnp.mean((z - b[1]) ** 2)
+
+        def loss(p, b):
+            return out_loss(out_fn(p, b), b)
+
+        v = {"w": jnp.ones((4, 3), jnp.float32)}
+        hv = make_hvp(loss, params, batch)(v)
+        gv = make_gnvp(out_fn, out_loss, params, batch)(v)
+        np.testing.assert_allclose(np.asarray(hv["w"]), np.asarray(gv["w"]), rtol=1e-4, atol=1e-5)
+
+
+class TestLineSearchDamping:
+    def test_armijo_full_step_on_quadratic(self):
+        loss = lambda p: 0.5 * tree_dot(p, p)
+        params = _vec([2.0, -3.0])
+        g = params
+        delta = tree_scale(-1.0, g)  # Newton step
+        res = armijo(loss, params, loss(params), delta, tree_dot(g, delta))
+        assert float(res.alpha) == 1.0 and bool(res.success)
+
+    def test_armijo_backtracks_on_overshoot(self):
+        loss = lambda p: 0.5 * tree_dot(p, p)
+        params = _vec([1.0])
+        delta = _vec([-10.0])  # way too far
+        res = armijo(loss, params, loss(params), delta, tree_dot(params, delta))
+        assert float(res.alpha) < 1.0 and bool(res.success)
+
+    def test_lm_update_directions(self):
+        lam = jnp.asarray(1.0)
+        # good model fit -> decrease lambda
+        lam_good, rho = lm_update(lam, 1.0, 0.0, -1.0)
+        assert float(lam_good) < 1.0 and float(rho) == pytest.approx(1.0)
+        # poor fit -> increase
+        lam_bad, _ = lm_update(lam, 1.0, 0.99, -1.0)
+        assert float(lam_bad) > 1.0
+        # ascent -> increase hard
+        lam_up, _ = lm_update(lam, 1.0, 1.5, -1.0)
+        assert float(lam_up) > float(lam_bad)
+
+    def test_sign_correct(self):
+        g = _vec([1.0, 0.0])
+        d = _vec([1.0, 1.0])  # ascent direction
+        d2, _ = sign_correct(g, d)
+        assert float(tree_dot(g, d2)) <= 0

@@ -1,0 +1,61 @@
+"""Sequence-sharded flash-decode == unsharded decode_attend (8 fake devices,
+subprocess so the main suite keeps its 1-device view)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.models.attention import KVCache, attn_init, decode_attend, init_kv_cache
+    from repro.models.decode_sharded import sharded_decode_attend
+
+    cfg = get_smoke_config("granite-3-8b")       # GQA kv=2 < 8 shards
+    mesh = jax.make_mesh((8,), ("model",))
+    dtype = jnp.float32
+    p = attn_init(jax.random.PRNGKey(0), cfg, dtype)
+    B, W = 2, 64
+    cache = init_kv_cache(cfg, B, W, dtype)
+    # pre-fill some slots with random K/V at positions 0..39
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    npos = 40
+    cache = KVCache(
+        k=cache.k.at[:, :npos].set(jax.random.normal(ks[0], (B, npos, cfg.n_kv_heads, cfg.resolved_head_dim))),
+        v=cache.v.at[:, :npos].set(jax.random.normal(ks[1], (B, npos, cfg.n_kv_heads, cfg.resolved_head_dim))),
+        pos=cache.pos.at[:npos].set(jnp.arange(npos)),
+    )
+    x = jax.random.normal(ks[2], (B, 1, cfg.d_model), dtype)
+    t = jnp.asarray(npos, jnp.int32)
+
+    y_ref, c_ref = decode_attend(p, x, t, cache, cfg)
+
+    sharded_cache = jax.device_put(cache, NamedSharding(mesh, P()))
+    sharded_cache = KVCache(
+        jax.device_put(cache.k, NamedSharding(mesh, P(None, "model"))),
+        jax.device_put(cache.v, NamedSharding(mesh, P(None, "model"))),
+        jax.device_put(cache.pos, NamedSharding(mesh, P("model"))),
+    )
+    y_sh, c_sh = jax.jit(
+        lambda p, x, c: sharded_decode_attend(p, x, t, c, cfg, mesh)
+    )(p, x, sharded_cache)
+
+    np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(c_sh.k), np.asarray(c_ref.k), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_sh.pos), np.asarray(c_ref.pos))
+    print("OK")
+""")
+
+
+def test_sharded_decode_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout + r.stderr[-3000:]
+    assert "OK" in r.stdout

@@ -1,0 +1,27 @@
+"""The flash-attention model path (cfg.use_flash_attention) must match the
+jnp prefill path (kernel in interpret mode on CPU)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import lm_batch
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mixtral-8x22b"])
+def test_flash_prefill_matches_jnp(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=64)
+    model_jnp = build_model(cfg)
+    model_fa = build_model(cfg.replace(use_flash_attention=True))
+    params = model_jnp.init(jax.random.PRNGKey(0))
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, 2, 256)  # block-aligned S
+    logits_jnp, cache_jnp = model_jnp.prefill(params, batch, max_len=256)
+    logits_fa, cache_fa = model_fa.prefill(params, batch, max_len=256)
+    np.testing.assert_allclose(
+        np.asarray(logits_fa), np.asarray(logits_jnp), rtol=2e-3, atol=2e-3
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(cache_jnp), jax.tree_util.tree_leaves(cache_fa)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,54 @@
+"""Hybrid-CG operator switching (paper §5): after an exact-Hessian iteration
+that encounters negative curvature, the NEXT iteration uses the Gauss-Newton
+operator, then switches back."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import HFConfig, hf_init, hf_step
+
+
+def loss_fn(params, batch):
+    x, y = params["x"], params["y"]
+    return 0.5 * x**2 + 0.25 * y**4 - 0.5 * y**2 + 0.0 * jnp.sum(batch)
+
+
+def model_out_fn(params, batch):
+    return jnp.stack([params["x"], params["y"] ** 2 / 2.0])
+
+
+def out_loss_fn(z, batch):
+    return 0.5 * z[0] ** 2 + z[1] ** 2 - z[1] + 0.0 * jnp.sum(batch)
+
+
+BATCH = jnp.zeros((1,))
+
+
+def test_hybrid_gn_flag_flips_and_resets():
+    cfg = HFConfig(solver="hybrid_cg", max_cg_iters=10, init_damping=1e-3)
+    params = {"x": jnp.asarray(0.9), "y": jnp.asarray(0.0)}
+    state = hf_init(params, cfg)
+    step = jax.jit(lambda p, s: hf_step(
+        loss_fn, p, s, BATCH, BATCH, cfg,
+        model_out_fn=model_out_fn, out_loss_fn=out_loss_fn))
+    flags = []
+    ncs = []
+    for _ in range(8):
+        params, state, m = step(params, state)
+        flags.append(bool(state.use_gn))
+        ncs.append(bool(m["nc_found"]))
+    # near the saddle, exact-Hessian iterations find NC -> next uses GN
+    assert any(flags), "GN fallback never triggered"
+    for i in range(len(flags) - 1):
+        if flags[i]:  # a GN iteration NEVER schedules another GN iteration
+            assert not flags[i + 1]
+        if ncs[i] and not flags[i]:  # exact-H iteration w/ NC schedules GN
+            assert flags[i + 1]
+
+
+def test_metrics_report_gn_usage():
+    cfg = HFConfig(solver="hybrid_cg", max_cg_iters=5, init_damping=1e-3)
+    params = {"x": jnp.asarray(0.9), "y": jnp.asarray(0.0)}
+    state = hf_init(params, cfg)
+    _, state, m = hf_step(loss_fn, params, state, BATCH, BATCH, cfg,
+                          model_out_fn=model_out_fn, out_loss_fn=out_loss_fn)
+    assert "used_gn" in m and not bool(m["used_gn"])  # first step is exact-H

@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), sweeping shapes and
+dtypes, plus hypothesis property tests on the CG fusions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _qkv(key, B, S, H, KV, hd, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, S, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, S, KV, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FA_CASES = [
+    # (B, S, H, KV, hd, blk, causal, window, dtype)
+    (1, 128, 1, 1, 64, 64, True, None, jnp.float32),
+    (2, 256, 4, 2, 64, 128, True, None, jnp.float32),
+    (1, 256, 4, 4, 32, 64, False, None, jnp.float32),
+    (1, 256, 2, 1, 64, 64, True, 64, jnp.float32),     # sliding window
+    (2, 128, 8, 2, 128, 64, True, None, jnp.bfloat16), # GQA bf16
+    (1, 512, 2, 2, 64, 128, True, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,blk,causal,window,dtype", FA_CASES)
+def test_flash_attention_matches_ref(B, S, H, KV, hd, blk, causal, window, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, KV, hd, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              blk_q=blk, blk_k=blk, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_uneven_blocks():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 384, 2, 2, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, blk_q=128, blk_k=128, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=200_000),
+    alpha=st.floats(min_value=-3, max_value=3, allow_nan=False),
+    gamma=st.floats(min_value=-3, max_value=3, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_x_update_property(n, alpha, gamma, seed):
+    key = jax.random.PRNGKey(seed)
+    x, p, s = (jax.random.normal(k, (n,), jnp.float32)
+               for k in jax.random.split(key, 3))
+    out = ops.bicgstab_x_update(x, p, s, alpha, gamma, interpret=True)
+    expected = ref.bicgstab_x_update_ref(x, p, s, alpha, gamma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=200_000),
+    gamma=st.floats(min_value=-3, max_value=3, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_residual_dots_property(n, gamma, seed):
+    key = jax.random.PRNGKey(seed)
+    s, As, r0s = (jax.random.normal(k, (n,), jnp.float32)
+                  for k in jax.random.split(key, 3))
+    r, d1, d2 = ops.bicgstab_residual_dots(s, As, r0s, gamma, interpret=True)
+    er, e1, e2 = ref.bicgstab_residual_dots_ref(s, As, r0s, gamma)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(er), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(d1), float(e1), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(float(d2), float(e2), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [1, 127, 4096, 65536, 65537, 300_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dot2_shapes_dtypes(n, dtype):
+    key = jax.random.PRNGKey(n)
+    u = jax.random.normal(key, (n,), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32).astype(dtype)
+    d1, d2 = ops.dot2(u, v, interpret=True)
+    e1, e2 = ref.dot2_ref(u, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(float(d1), float(e1), rtol=tol, atol=tol * n ** 0.5)
+    np.testing.assert_allclose(float(d2), float(e2), rtol=tol, atol=tol * n ** 0.5)

@@ -1,0 +1,64 @@
+"""Roofline analysis unit tests: HLO collective parser + term arithmetic."""
+import numpy as np
+
+from repro.roofline import (
+    HW,
+    collective_bytes_from_hlo,
+    cost_summary,
+    model_flops,
+    roofline_terms,
+)
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline.analysis import active_param_count
+
+HLO = """
+HloModule jit_step
+  %x1 = bf16[128,256]{1,0} all-reduce(bf16[128,256]{1,0} %a), replica_groups=...
+  %x2 = f32[64]{0} all-gather(f32[4]{0} %b), dimensions={0}
+  %x3 = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-reduce-start(%c, %d)
+  %x4 = f32[8,8]{1,0} all-reduce-done(%x3)
+  %x5 = bf16[2,4]{1,0} collective-permute(bf16[2,4]{1,0} %e)
+  %x6 = f32[16]{0} reduce-scatter(f32[64]{0} %f), dimensions={0}
+  %nope = f32[10]{0} add(f32[10]{0} %g, f32[10]{0} %h)
+"""
+
+
+def test_collective_parser():
+    c = collective_bytes_from_hlo(HLO)
+    assert c["all-reduce"] == 128 * 256 * 2 + 2 * 8 * 8 * 4  # x1 + x3 tuple
+    assert c["all-gather"] == 64 * 4
+    assert c["collective-permute"] == 2 * 4 * 2
+    assert c["reduce-scatter"] == 16 * 4
+    assert c["counts"]["all-reduce"] == 2          # start counted, done not
+    assert c["total"] == sum(c[k] for k in
+                             ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all", "collective-permute"))
+    assert len(c["top_ops"]) >= 4
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(197e12, 0.0, 0.0, 256)   # exactly 1s of compute
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert t["bottleneck"] == "compute_s"
+    t = roofline_terms(0.0, 819e9, 50e9 * 2, 256)
+    assert t["bottleneck"] == "collective_s"
+
+
+def test_cost_summary_handles_list_and_dict():
+    assert cost_summary([{"flops": 5.0, "bytes accessed": 7.0}])["flops"] == 5.0
+    assert cost_summary({"flops": 5.0})["bytes_accessed"] == 0.0
+    assert cost_summary(None) == {}
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("mixtral-8x22b")
+    assert active_param_count(cfg) < 0.4 * cfg.param_count()   # 2 of 8 experts
+    dense = get_config("qwen2-1.5b")
+    assert active_param_count(dense) == dense.param_count()
+
+
+def test_model_flops_shapes():
+    cfg = get_config("qwen2-1.5b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr > de * 1000   # train touches ~8k x more tokens at 3x flops

@@ -1,0 +1,31 @@
+"""SSD intra-chunk Pallas kernel vs the pure-jnp ssd_chunked oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd_chunked_pallas
+from repro.models.ssm import ssd_chunked
+
+CASES = [
+    # (B, L, H, N, P, chunk)
+    (1, 64, 1, 16, 16, 16),
+    (2, 128, 4, 32, 64, 32),
+    (1, 256, 2, 64, 64, 128),
+    (2, 64, 3, 16, 32, 64),     # single chunk
+]
+
+
+@pytest.mark.parametrize("B,L,H,N,P,chunk", CASES)
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_ssd_pallas_matches_jnp(B, L, H, N, P, chunk, with_h0):
+    ks = jax.random.split(jax.random.PRNGKey(L + H), 5)
+    u = jax.random.normal(ks[0], (B, L, H, P))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    Bv = jax.random.normal(ks[2], (B, L, N)) * 0.5
+    Cv = jax.random.normal(ks[3], (B, L, N)) * 0.5
+    h0 = jax.random.normal(ks[4], (B, H, N, P)) * 0.3 if with_h0 else None
+    y_ref, h_ref = ssd_chunked(u, log_a, Bv, Cv, chunk, h0=h0)
+    y_k, h_k = ssd_chunked_pallas(u, log_a, Bv, Cv, chunk, h0=h0, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref), rtol=2e-4, atol=2e-4)
