@@ -2,6 +2,14 @@
 timing only) vs the jnp reference path (XLA-compiled, the meaningful CPU
 number). On TPU the Pallas path compiles natively; derived column reports
 the HBM-traffic model (bytes moved) which is hardware-independent.
+
+Also benchmarks the *end-to-end solver paths*: one full Bi-CG-STAB / CG
+solve through the tree (pytree leaf-ops) backend vs the flat (fused-kernel)
+backend, plus the flat backend with the fusions replaced by plain jnp ops —
+which isolates representation (ravel once vs per-leaf dispatch) from fusion.
+On CPU the honest fused number is the jnp-substituted flat path (Pallas
+interpret mode times the Python interpreter, not the kernel); on TPU the
+fused path compiles natively and the traffic model predicts the win.
 """
 from __future__ import annotations
 
@@ -10,6 +18,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core.krylov import FlatVectorBackend, get_backend
+from repro.core.solvers import bicgstab, cg
 from repro.kernels import ref
 
 
@@ -19,6 +29,79 @@ def _time_it(fn, *args, reps=5):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / reps
+
+
+class _JnpFlatBackend(FlatVectorBackend):
+    """Flat representation with the fused Pallas kernels swapped for plain
+    jnp ops: isolates ravel-once representation from kernel fusion, and is
+    the honest flat-path number on CPU (interpret mode times the Python
+    interpreter, not the kernel)."""
+
+    name = "flat_jnp"
+
+    def dot(self, u, v):
+        return jnp.vdot(u, v)
+
+    def dot2(self, u, v):
+        return jnp.vdot(u, v), jnp.vdot(v, v)
+
+    def norm(self, v):
+        return jnp.sqrt(jnp.vdot(v, v))
+
+    def fused_update(self, y, u, v, a, g):
+        return y + a * u + g * v
+
+    def update_residual(self, s, As, gamma, r0s=None):
+        r = s - gamma * As
+        return r, (None if r0s is None else jnp.vdot(r, r0s)), jnp.vdot(r, r)
+
+
+def _solver_rows(log):
+    """End-to-end Krylov solve: tree backend vs flat backends.
+
+    Operator = damped diagonal (cheap on purpose: isolates the recurrence
+    cost, which is what the backends change). tol=0 forces the full
+    iteration budget so both paths do identical work.
+    """
+    rows = []
+    iters = 8
+    n = 1 << 20  # ~1M params over 3 pytree leaves
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 4)
+    shapes = {"w1": (1024, 512), "w2": (512, 512), "b": (n - 1024 * 512 - 512 * 512,)}
+    d = {k: 1.0 + jax.random.uniform(kk, s) for (k, s), kk in zip(shapes.items(), ks)}
+    b = {k: jax.random.normal(kk, s) for (k, s), kk in zip(shapes.items(), ks[1:])}
+    x0 = jax.tree_util.tree_map(jnp.zeros_like, b)
+    A = lambda v: jax.tree_util.tree_map(lambda dd, vv: dd * vv + 0.1 * vv, d, v)
+
+    flat_ops = 10 * n * 4  # fused per-iteration bytes: 2×fused_update(4v) + residual_dots(2v)
+    tree_ops = 16 * n * 4  # unfused: same updates as separate axpys + dots re-reading operands
+
+    def bench(name, make_be, solver, solver_name):
+        be = make_be()
+        fn = jax.jit(lambda b, x0: solver(
+            A, b, x0, lam=0.1, max_iters=iters, tol=0.0, backend=be).x)
+        t = _time_it(fn, b, x0, reps=3)
+        rows.append((f"kernels/{solver_name}_{name}_n1M_it{iters}", t * 1e6,
+                     f"per_iter_us={t/iters*1e6:.0f} fused_traffic_ratio={flat_ops/tree_ops:.2f}"))
+
+    for solver, sname in ((bicgstab, "bicgstab"), (cg, "cg")):
+        bench("tree", lambda: get_backend("tree"), solver, sname)
+        bench("flat_jnp", lambda: _JnpFlatBackend(b), solver, sname)
+    # Pallas interpret mode: correctness-path timing only (Python executes the
+    # kernel body block-by-block) — smaller size to keep the suite fast. On
+    # TPU this path compiles natively and the traffic model above applies.
+    bs = {k: v[:64] if v.ndim == 1 else v[:64, :64] for k, v in b.items()}
+    ds = {k: v[:64] if v.ndim == 1 else v[:64, :64] for k, v in d.items()}
+    x0s = jax.tree_util.tree_map(jnp.zeros_like, bs)
+    As = lambda v: jax.tree_util.tree_map(lambda dd, vv: dd * vv + 0.1 * vv, ds, v)
+    fn = jax.jit(lambda b, x0: bicgstab(
+        As, b, x0, lam=0.1, max_iters=iters, tol=0.0,
+        backend=FlatVectorBackend(bs, interpret=True)).x)
+    t = _time_it(fn, bs, x0s, reps=1)
+    rows.append((f"kernels/bicgstab_flat_pallas_interpret_small_it{iters}", t * 1e6,
+                 "correctness_path_only=1"))
+    return rows
 
 
 def run(log=print):
@@ -48,4 +131,5 @@ def run(log=print):
     t = _time_it(d, x, p, s)
     rows.append(("kernels/residual_dots_ref_jnp", t * 1e6,
                  f"fused_traffic_ratio={(4*n*4)/(8*n*4):.2f}"))
+    rows.extend(_solver_rows(log))
     return rows

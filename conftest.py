@@ -2,6 +2,11 @@
 importable regardless of PYTHONPATH. Deliberately does NOT touch XLA flags —
 smoke tests and benches must see the real (1-device) CPU; only
 launch/dryrun.py sets the 512-device flag, in its own process.
+
+Registers the ``slow`` marker for long-running system/benchmark-shaped
+tests. Tier-1 (`pytest -x -q`) deselects them by default via pytest.ini's
+``addopts = -m "not slow"``; run everything with ``pytest -m ""`` or just
+the slow set with ``pytest -m slow --override-ini addopts=``.
 """
 import os
 import sys
@@ -10,3 +15,11 @@ _ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running system/benchmark-shaped test "
+        "(deselected by default; run with -m '' or -m slow)",
+    )

@@ -165,7 +165,8 @@ class HFOptConfig:
     init_damping: float = 1.0
     cg_decay: float = 0.95
     hvp_batch_frac: float = 0.25               # curvature mini-batch fraction
-    precondition: bool = False                 # Jacobi PCG (CG-family solvers)
+    precondition: bool = False                 # Jacobi preconditioning (all Krylov solvers)
+    krylov_backend: str = "tree"               # "tree" (sharded pytrees) | "flat" (fused Pallas)
 
 
 @dataclasses.dataclass(frozen=True)

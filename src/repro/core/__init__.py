@@ -1,15 +1,17 @@
 """Core: the paper's distributed Hessian-free optimizer."""
 from .hf import HFConfig, HFState, hf_init, hf_step, SOLVERS
 from .hvp import fd_hvp, make_damped, make_gnvp, make_hvp
+from .krylov import BACKENDS, FlatVectorBackend, TreeVectorBackend, get_backend
 from .line_search import armijo
 from .damping import lm_update
-from .solvers import KrylovResult, bicgstab, cg, sign_correct
+from .solvers import KrylovResult, bicgstab, cg, pcg, sign_correct
 from . import tree_math
 
 __all__ = [
     "HFConfig", "HFState", "hf_init", "hf_step", "SOLVERS",
     "fd_hvp", "make_damped", "make_gnvp", "make_hvp",
+    "BACKENDS", "FlatVectorBackend", "TreeVectorBackend", "get_backend",
     "armijo", "lm_update",
-    "KrylovResult", "bicgstab", "cg", "sign_correct",
+    "KrylovResult", "bicgstab", "cg", "pcg", "sign_correct",
     "tree_math",
 ]

@@ -1,0 +1,96 @@
+"""shard_map replication rules for ``lax.while_loop`` (jax 0.4.x compat).
+
+jax 0.4.37's ``jax.experimental.shard_map`` ships replication-check/rewrite
+rules for ``scan`` and ``cond`` but not for ``while`` — so any shard_map
+region with ``check_rep=True`` that contains a ``lax.while_loop`` (every
+Krylov solve and the Armijo search in this repo) fails with
+``NotImplementedError: No replication rule for while``. We keep check_rep
+ON because it is what verifies, end to end, that the step's outputs really
+are replicated as ``out_specs=P()`` promises — with it off, a missing
+collective (e.g. forgetting the explicit ``grad_reduce`` completion pmean
+that ``core.distributed`` threads into ``hf_step``) silently produces
+per-worker-divergent "replicated" state instead of an error.
+
+This module registers the missing rules, modeled 1:1 on the module's own
+``_scan_check`` / ``_scan_rewrite``: fixpoint the carry replication through
+the body jaxpr, pbroadcast inputs whose replication shrank, and rewrite
+body+cond to match. Newer jax versions ship these rules natively, in which
+case this is a no-op (``setdefault`` registration).
+
+Imported for its side effect by ``core.distributed``.
+"""
+from __future__ import annotations
+
+import operator as op
+
+try:  # pragma: no cover - exercised indirectly via tests/test_distributed.py
+    import jax.experimental.shard_map as _sm
+    from jax._src.lax import control_flow as _cf
+    from jax._src.util import split_list
+
+    _while_p = _cf.loops.while_p
+
+    def _and(a, b):
+        # RepType None marks constants / unconstrained values.
+        if a is None:
+            return b
+        if b is None:
+            return a
+        return a & b
+
+    def _while_check(mesh, *in_rep, cond_jaxpr, body_jaxpr, cond_nconsts,
+                     body_nconsts):
+        cond_rep, body_rep, carry_rep_in = split_list(
+            list(in_rep), [cond_nconsts, body_nconsts])
+        carry_rep = list(carry_rep_in)
+        for _ in range(1 + len(carry_rep)):
+            out_rep = _sm._check_rep(
+                mesh, body_jaxpr.jaxpr, [*body_rep, *carry_rep])
+            out_rep = list(map(_and, carry_rep, out_rep))
+            if out_rep == carry_rep:
+                break
+            carry_rep = out_rep
+        else:
+            raise Exception(
+                "while_loop carry replication fixpoint not reached; as a "
+                "workaround pass check_rep=False to shard_map")
+        # cond must be checkable too (its scalar predicate drives every
+        # device through the same trip count).
+        _sm._check_rep(mesh, cond_jaxpr.jaxpr, [*cond_rep, *carry_rep])
+        return carry_rep
+
+    def _while_rewrite(mesh, in_rep, *args, cond_jaxpr, body_jaxpr,
+                       cond_nconsts, body_nconsts):
+        cond_rep, body_rep, carry_rep_in = split_list(
+            list(in_rep), [cond_nconsts, body_nconsts])
+        carry_rep = list(carry_rep_in)
+        for _ in range(1 + len(carry_rep)):
+            _, out_rep = _sm._replication_rewrite_nomatch(
+                mesh, body_jaxpr, [*body_rep, *carry_rep])
+            out_rep = list(map(_and, carry_rep, out_rep))
+            if out_rep == carry_rep:
+                break
+            carry_rep = out_rep
+        else:
+            assert False, "while_loop carry replication fixpoint not reached"
+
+        body_jaxpr_ = _sm._replication_rewrite_match(
+            mesh, body_jaxpr, [*body_rep, *carry_rep], carry_rep)
+        cond_jaxpr_, _ = _sm._replication_rewrite_nomatch(
+            mesh, cond_jaxpr, [*cond_rep, *carry_rep])
+        dst_rep = [*cond_rep, *body_rep, *carry_rep]
+        args_ = [
+            _sm.pbroadcast(x, tuple(n for n in src if n not in dst))
+            if src - dst else x
+            for x, src, dst in zip(args, in_rep, dst_rep)
+        ]
+        out_vals = _while_p.bind(
+            *args_, cond_jaxpr=cond_jaxpr_, body_jaxpr=body_jaxpr_,
+            cond_nconsts=cond_nconsts, body_nconsts=body_nconsts)
+        return out_vals, carry_rep
+
+    # setdefault semantics: a no-op on jax versions that grew native rules.
+    _sm.register_check(_while_p)(_while_check)
+    _sm.register_rewrite(_while_p)(_while_rewrite)
+except (ImportError, AttributeError):  # newer jax moved/obsoleted these
+    pass

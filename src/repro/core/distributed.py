@@ -16,6 +16,15 @@ on replicated state, exactly like the paper's root-node logic — except no
 root: every chip is the root. The resulting step is numerically identical to
 the pjit path (tested) — use whichever fits the deployment; GSPMD can
 overlap/schedule, shard_map makes the schedule auditable.
+
+Because the Krylov state is per-chip *replicated* here (pure data
+parallelism), this is exactly the deployment where
+``HFConfig(krylov_backend="flat")`` pays: the solve ravels the replicated
+iterates into one flat buffer per chip and runs the recurrences through the
+fused Pallas kernels with zero extra communication (the collectives all live
+inside the loss/HVP operator applications). Under pjit with *sharded*
+params, keep the default "tree" backend — the flat ravel would break
+per-tensor shardings.
 """
 from __future__ import annotations
 
@@ -24,8 +33,9 @@ from typing import Any, Callable, Sequence
 
 import jax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 
+from . import _shard_map_compat  # noqa: F401  (while_loop replication rules)
 from .hf import HFConfig, hf_step
 
 
@@ -60,9 +70,17 @@ def data_parallel_hf_step(
             lambda x: x[: max(int(x.shape[0] * hvp_frac), 1)], b
         )
 
-    # NOTE: replication checking must stay ON — it is what makes the
-    # transpose of the pmean'd loss insert the gradient psum (with it off,
-    # each worker would keep only its local gradient shard / N).
+    # NOTE: the gradient/HVP all-reduces are EXPLICIT (grad_reduce=pmean
+    # below). Reverse-mode through the pmean'd loss leaves each worker with
+    # its full *local* gradient contribution (no cross-worker reduction
+    # appears in the transpose); pmean-ing the AD outputs — (1/N)Σ_w g_w,
+    # matching the pmean'd loss — is Alg. 2's "reduce to root", one reduce
+    # for g and one per Krylov iteration. Replication checking stays ON so
+    # out_specs=P() is verified end-to-end (the while_loop replication rules
+    # come from _shard_map_compat).
+    def grad_reduce(t):
+        return jax.lax.pmean(t, axes)
+
     @functools.partial(
         shard_map,
         mesh=mesh,
@@ -74,6 +92,7 @@ def data_parallel_hf_step(
             dloss, params, state, batch, hvp_slice(batch), config,
             model_out_fn=model_out_fn,
             out_loss_fn=None if out_loss_fn is None else dout_loss,
+            grad_reduce=grad_reduce,
         )
 
     return step

@@ -15,6 +15,11 @@ The step is pure and jittable; under pjit with the batch sharded over
 ("pod","data") every gradient / HVP / line-search loss evaluation contains
 exactly one logical all-reduce — the paper's MPI schedule (one reduce for g,
 one per Krylov iteration, one per line-search trial).
+
+The inner Krylov solve runs on a swappable vector backend
+(``HFConfig.krylov_backend``): "tree" (pytree iterates, sharding-preserving)
+or "flat" (ravelled f32 iterates through the fused Pallas kernels — see
+core.krylov). Both yield the same KrylovResult; solver math is identical.
 """
 from __future__ import annotations
 
@@ -26,8 +31,9 @@ import jax.numpy as jnp
 
 from . import damping as damping_mod
 from .hvp import make_damped, make_gnvp, make_hvp
+from .krylov import BACKENDS, get_backend
 from .line_search import armijo
-from .solvers import bicgstab, cg, sign_correct
+from .solvers import bicgstab, cg, hutchinson_diag, pcg, sign_correct
 from .tree_math import (
     tree_axpy,
     tree_dot,
@@ -62,17 +68,27 @@ class HFConfig:
     # quadratic model is unbounded below so it prescribes no scale; we take at
     # least this much and let the Armijo search (Alg. 2 line 9) globalize it.
     nc_min_step: float = 0.1
-    # Jacobi preconditioning for the CG-family solvers (Chapelle & Erhan
-    # 2011; Martens 2010 §4.7): M = (|diag(Ĝ)| + λ)^α estimated by one
-    # Hutchinson probe per step. The paper omits it ("not much helpful,
+    # Jacobi preconditioning: M = (|diag(Ĝ)| + λ)^α estimated by one
+    # Hutchinson probe per step. CG-family solvers use PCG; Bi-CG-STAB uses
+    # its right-preconditioned form. The paper omits it ("not much helpful,
     # more computation and storage") — off by default, available for the
     # ill-conditioned regimes where it does pay.
     precondition: bool = False
     precond_alpha: float = 0.75
+    # Krylov vector backend (core.krylov): "tree" keeps iterates as pytrees
+    # (sharding-preserving; right when params are sharded under pjit);
+    # "flat" ravels them once per solve and runs the recurrences through the
+    # fused Pallas kernels (right for per-chip-replicated Krylov state, the
+    # paper's pure data-parallel setting; interpret-mode off-TPU).
+    krylov_backend: str = "tree"
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
             raise ValueError(f"solver must be one of {SOLVERS}, got {self.solver!r}")
+        if self.krylov_backend not in BACKENDS:
+            raise ValueError(
+                f"krylov_backend must be one of {BACKENDS}, got {self.krylov_backend!r}"
+            )
 
 
 class HFState(NamedTuple):
@@ -104,6 +120,7 @@ def hf_step(
     config: HFConfig,
     model_out_fn: Optional[Callable[[Any, Any], jax.Array]] = None,
     out_loss_fn: Optional[Callable[[jax.Array, Any], jax.Array]] = None,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
 ):
     """One outer HF iteration. Returns (params, state, metrics).
 
@@ -113,18 +130,34 @@ def hf_step(
                     paper's Fig. 4 batch-size scaling).
     ``model_out_fn``/``out_loss_fn`` — network/loss split, required for the
     Gauss-Newton operator (``gn_cg`` and ``hybrid_cg``).
+    ``grad_reduce`` — completion collective for AD results under explicit
+    data parallelism (shard_map): applied to the gradient and to every
+    curvature-operator output. Reverse-mode through a pmean'd loss yields
+    each worker's full *local* contribution (the reduction the paper's
+    "reduce to root" performs is not inserted by the transpose); the
+    distributed wrapper passes ``lax.pmean`` here — Alg. 2's one reduce for
+    g and one per Krylov iteration, made explicit. Under pjit/GSPMD leave it
+    None (the partitioner inserts the collectives from sharding
+    propagation).
     """
     needs_gn = config.solver in ("gn_cg", "hybrid_cg")
     if needs_gn and (model_out_fn is None or out_loss_fn is None):
         raise ValueError(f"solver {config.solver} requires model_out_fn/out_loss_fn")
 
+    def _reduced(op):
+        if grad_reduce is None:
+            return op
+        return lambda v: grad_reduce(op(v))
+
     # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) ------------
     f0, g = jax.value_and_grad(loss_fn)(params, batch)
+    if grad_reduce is not None:
+        g = grad_reduce(g)
 
     # ---- Alg.2 line 5: stochastic curvature operator on the mini-batch -----
-    exact = make_hvp(loss_fn, params, hvp_batch)
+    exact = _reduced(make_hvp(loss_fn, params, hvp_batch))
     if needs_gn:
-        gn = make_gnvp(model_out_fn, out_loss_fn, params, hvp_batch)
+        gn = _reduced(make_gnvp(model_out_fn, out_loss_fn, params, hvp_batch))
     if config.solver == "gn_cg":
         G = gn
     elif config.solver in ("hessian_cg", "bicgstab"):
@@ -150,19 +183,25 @@ def hf_step(
         x0 = tree_axpy(scale, jit_tree, x0)
 
     # ---- Alg.2 line 6: Krylov solve ----------------------------------------
-    if config.solver == "bicgstab":
-        res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters, tol=config.cg_tol)
-    elif config.precondition:
-        from .solvers import hutchinson_diag, pcg
-
+    # Vector backend: "tree" keeps the solve on sharding-preserving pytrees;
+    # "flat" ravels once and runs the recurrences via the fused Pallas kernels.
+    krylov_be = get_backend(config.krylov_backend, template=b)
+    m_inv = None
+    if config.precondition:
         diag = hutchinson_diag(G, b, state.step)
         m_inv = jax.tree_util.tree_map(
             lambda d: 1.0 / (jnp.abs(d) + lam) ** config.precond_alpha, diag
         )
+    if config.solver == "bicgstab":
+        res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
+                       tol=config.cg_tol, M_inv=m_inv, backend=krylov_be)
+    elif m_inv is not None:
         res = pcg(A, b, x0, lam=lam, M_inv=m_inv,
-                  max_iters=config.max_cg_iters, tol=config.cg_tol)
+                  max_iters=config.max_cg_iters, tol=config.cg_tol,
+                  backend=krylov_be)
     else:
-        res = cg(A, b, x0, lam=lam, max_iters=config.max_cg_iters, tol=config.cg_tol)
+        res = cg(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
+                 tol=config.cg_tol, backend=krylov_be)
 
     # ---- Alg.2 line 7: best descent direction among {solution, NC dir} -----
     # Quadratic-model values come FREE from solver byproducts — no extra

@@ -1,0 +1,273 @@
+"""Krylov vector backends + the solver components shared by every solver.
+
+The Krylov recurrences in ``solvers.py`` are written against an abstract
+*vector backend* instead of concrete pytree ops. A backend decides how the
+Krylov iterates (x, r, p, s, ...) are **represented** and how the
+bandwidth-bound recurrences (axpy chains, dot products) **execute**:
+
+* ``TreeVectorBackend`` ("tree") — iterates stay pytrees with the parameter
+  structure; every op maps over leaves (``tree_math``). Per-tensor shardings
+  survive under pjit/GSPMD: each dot is a per-shard reduction + one scalar
+  all-reduce (the paper's per-CG-iteration MPI reduce). This is the right
+  backend when params are sharded across devices.
+
+* ``FlatVectorBackend`` ("flat") — iterates are ravelled ONCE per solve into
+  a single flat f32 buffer and the recurrences run through the fused Pallas
+  kernels (``kernels.ops.bicgstab_x_update`` / ``bicgstab_residual_dots`` /
+  ``dot2``), which fuse the axpy chains with the dots they feed and so remove
+  whole HBM passes over the model-sized vectors. The operator A still sees
+  pytrees (``wrap_op`` unflattens at the boundary). Off-TPU the kernels fall
+  back to Pallas interpret mode. This is the right backend when the Krylov
+  state is replicated per-chip (pure data parallelism, the paper's setting)
+  and the inner loop is HBM-bandwidth-bound.
+
+Shared solver components (used by ``cg``/``pcg``/``bicgstab`` so the logic
+exists exactly once):
+
+* ``nc_probe`` / ``nc_init``      — negative-curvature capture of the *raw*
+  (undamped) operator from direction/operator-product pairs the recurrence
+  already has (dᵀGd = dᵀAd − λ‖d‖², no extra operator applications),
+* ``phi_value`` / ``best_update`` — free CG-backtracking: φ(x) = ½xᵀAx − bᵀx
+  evaluated via the residual identity A·x = b − r, tracking the best-model
+  iterate over the trajectory,
+* ``guard_div``                   — breakdown-guarded division (Bi-CG-STAB
+  ρ/ω breakdowns, CG indefiniteness truncation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import tree_math as tm
+
+EPS = 1e-20
+
+Op = Callable[[Any], Any]
+
+
+# ---------------------------------------------------------------------------
+# Vector backends
+# ---------------------------------------------------------------------------
+
+
+class TreeVectorBackend:
+    """Sharding-preserving pytree backend (the repo's original representation).
+
+    ``lift``/``lower`` are identities; every op is a leaf-map. Dots reduce
+    per shard + one scalar all-reduce under pjit (see tree_math.tree_dot).
+    """
+
+    name = "tree"
+
+    # -- representation -----------------------------------------------------
+    def lift(self, tree):
+        return tree
+
+    def lower(self, vec):
+        return vec
+
+    def wrap_op(self, A: Op) -> Op:
+        return A
+
+    # -- linear algebra -----------------------------------------------------
+    def dot(self, u, v):
+        return tm.tree_dot(u, v)
+
+    def dot2(self, u, v):
+        """(<u,v>, <v,v>)."""
+        return tm.tree_dot(u, v), tm.tree_dot(v, v)
+
+    def norm(self, v):
+        return tm.tree_norm(v)
+
+    def sub(self, a, b):
+        return tm.tree_sub(a, b)
+
+    def axpy(self, alpha, x, y):
+        return tm.tree_axpy(alpha, x, y)
+
+    def scale(self, alpha, x):
+        return tm.tree_scale(alpha, x)
+
+    def mul(self, m, v):
+        return jax.tree_util.tree_map(lambda mm, vv: mm * vv, m, v)
+
+    def where(self, cond, a, b):
+        return tm.tree_where(cond, a, b)
+
+    def zeros_like(self, v):
+        return tm.tree_zeros_like(v)
+
+    # -- fused recurrence ops (unfused here: one leaf-map per op) -----------
+    def fused_update(self, y, u, v, a, g):
+        """y + a*u + g*v  (the Bi-CG-STAB x/p updates)."""
+        return tm.tree_axpy(g, v, tm.tree_axpy(a, u, y))
+
+    def update_residual(self, s, As, gamma, r0s=None):
+        """r = s − γ·As; returns (r, <r,r0s> or None, <r,r>)."""
+        r = tm.tree_axpy(-gamma, As, s)
+        d1 = None if r0s is None else tm.tree_dot(r, r0s)
+        return r, d1, tm.tree_dot(r, r)
+
+
+class FlatVectorBackend:
+    """Flat-buffer backend over the fused Pallas kernels.
+
+    Built from a *template* pytree (structure/shapes of the Krylov space —
+    in HF that is the rhs b). ``lift`` ravels a pytree into one flat f32
+    vector; ``lower`` restores the pytree (f32 leaves, matching what the
+    tree backend produces for Krylov iterates). The recurrences then run on
+    flat buffers via the fused kernels; ``interpret=None`` resolves to
+    interpret mode off-TPU (kernels.ops handles the resolution).
+    """
+
+    name = "flat"
+
+    def __init__(self, template, interpret: Optional[bool] = None):
+        from ..kernels import ops as _kops
+
+        self._kops = _kops
+        self._interpret = interpret
+        leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        self._shapes = [l.shape for l in leaves]
+        self._sizes = [int(l.size) for l in leaves]
+        self._offsets = []
+        off = 0
+        for s in self._sizes:
+            off += s
+            self._offsets.append(off)
+
+    # -- representation -----------------------------------------------------
+    def lift(self, tree):
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(-1) for l in leaves]
+        )
+
+    def lower(self, vec):
+        parts = jnp.split(vec, self._offsets[:-1]) if len(self._sizes) > 1 else [vec]
+        leaves = [p.reshape(s) for p, s in zip(parts, self._shapes)]
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def wrap_op(self, A: Op) -> Op:
+        return lambda v: self.lift(A(self.lower(v)))
+
+    # -- linear algebra -----------------------------------------------------
+    def dot(self, u, v):
+        return self._kops.dot2(u, v, interpret=self._interpret)[0]
+
+    def dot2(self, u, v):
+        return self._kops.dot2(u, v, interpret=self._interpret)
+
+    def norm(self, v):
+        return jnp.sqrt(self._kops.dot2(v, v, interpret=self._interpret)[1])
+
+    def sub(self, a, b):
+        return a - b
+
+    def axpy(self, alpha, x, y):
+        return alpha * x + y
+
+    def scale(self, alpha, x):
+        return alpha * x
+
+    def mul(self, m, v):
+        return m * v
+
+    def where(self, cond, a, b):
+        return jnp.where(cond, a, b)
+
+    def zeros_like(self, v):
+        return jnp.zeros_like(v)
+
+    # -- fused recurrence ops ------------------------------------------------
+    def fused_update(self, y, u, v, a, g):
+        return self._kops.bicgstab_x_update(y, u, v, a, g, interpret=self._interpret)
+
+    def update_residual(self, s, As, gamma, r0s=None):
+        r, d1, d2 = self._kops.bicgstab_residual_dots(
+            s, As, s if r0s is None else r0s, gamma, interpret=self._interpret
+        )
+        return r, (None if r0s is None else d1), d2
+
+
+BACKENDS = ("tree", "flat")
+
+_TREE_BACKEND = TreeVectorBackend()
+
+
+def get_backend(name: str, template=None, interpret: Optional[bool] = None):
+    """Resolve a backend by name. ``template`` (a pytree spanning the Krylov
+    space, e.g. the rhs b) is required for "flat"."""
+    if name == "tree":
+        return _TREE_BACKEND
+    if name == "flat":
+        if template is None:
+            raise ValueError("flat backend requires a template pytree")
+        return FlatVectorBackend(template, interpret=interpret)
+    raise ValueError(f"krylov backend must be one of {BACKENDS}, got {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shared solver components
+# ---------------------------------------------------------------------------
+
+
+class NCState(NamedTuple):
+    """Most-negative normalized raw-curvature direction seen so far."""
+    found: jax.Array   # bool scalar
+    dir: Any           # backend vector, unit norm (zeros if none)
+    curv: jax.Array    # dᵀGd / ‖d‖² for `dir` (0 if none)
+
+
+def nc_init(be, b) -> NCState:
+    return NCState(jnp.zeros((), bool), be.zeros_like(b), jnp.zeros(()))
+
+
+def nc_probe(be, d, dAd, d_sq, lam, st: NCState) -> NCState:
+    """Update the NC state from a (direction, dᵀAd, dᵀd) triple the
+    recurrence already computed. A is the damped operator: the raw curvature
+    is (dᵀAd − λ‖d‖²)/‖d‖² — negative raw curvature is a saddle-escape
+    direction (the paper's dᵀHd < 0 criterion on the stochastic Hessian)."""
+    raw = (dAd - lam * d_sq) / jnp.maximum(d_sq, EPS)
+    is_nc = raw < 0.0
+    better = jnp.logical_and(is_nc, raw < st.curv)
+    ndir = be.where(
+        better, be.scale(1.0 / jnp.sqrt(jnp.maximum(d_sq, EPS)), d), st.dir
+    )
+    ncurv = jnp.where(better, raw, st.curv)
+    return NCState(jnp.logical_or(st.found, is_nc), ndir, ncurv)
+
+
+class BestState(NamedTuple):
+    """Free CG-backtracking: argmin over the trajectory of φ(x)=½xᵀAx−bᵀx."""
+    x: Any
+    r: Any
+    phi: jax.Array
+
+
+def phi_value(be, b, x, r):
+    """Quadratic model φ(x) = ½xᵀAx − bᵀx via A·x = b − r (no operator
+    application, two scalar dots)."""
+    return -0.5 * be.dot(b, x) - 0.5 * be.dot(x, r)
+
+
+def best_init(be, b, x0, r0) -> BestState:
+    return BestState(x0, r0, phi_value(be, b, x0, r0))
+
+
+def best_update(be, x, r, phi, valid, st: BestState) -> BestState:
+    improved = jnp.logical_and(phi < st.phi, valid)
+    return BestState(
+        be.where(improved, x, st.x),
+        be.where(improved, r, st.r),
+        jnp.where(improved, phi, st.phi),
+    )
+
+
+def guard_div(num, den, eps: float = EPS):
+    """num/den with breakdown detection: returns (quotient, |den|<eps)."""
+    bad = jnp.abs(den) < eps
+    return num / jnp.where(bad, 1.0, den), bad

@@ -1,50 +1,65 @@
 """Krylov solvers for the damped curvature system  (G + λI) d = -g.
 
-* ``cg``        — naive conjugate gradients with Martens-style truncation:
+One engine, three entry points, two vector backends.
+
+* ``cg``        — conjugate gradients with Martens-style truncation:
                   terminates as soon as a negative-curvature direction is
                   generated (pᵀAp ≤ 0) and *reports* that direction instead of
                   discarding it (the paper's critique of Newton-CG is that the
                   information is thrown away).
+* ``pcg``       — the same recurrence with a Jacobi preconditioner folded in
+                  (``cg`` is literally ``pcg`` with the identity — one body).
 * ``bicgstab``  — stabilized bi-conjugate gradients (paper Algorithm 3); works
-                  on the *indefinite* exact stochastic Hessian. Both the search
-                  directions p_j and the intermediate s_j come with their
-                  operator products (Ap_j, As_j) already computed, so negative
-                  curvature of the *undamped* operator is detected for free:
-                  dᵀG d = dᵀA d − λ‖d‖². The most negative normalized-curvature
-                  direction seen is returned alongside the solution.
+                  on the *indefinite* exact stochastic Hessian, optionally
+                  right-preconditioned (pass ``M_inv``; the van der Vorst
+                  M⁻¹-in-the-recurrence form, which reduces exactly to plain
+                  Bi-CG-STAB for M = I). Both the search directions p̂_j and
+                  the intermediates ŝ_j come with their operator products
+                  already computed, so negative curvature of the *undamped*
+                  operator is detected for free: dᵀG d = dᵀA d − λ‖d‖².
 
-Both solvers implement **free CG-backtracking**: the returned iterate is the
-one minimizing the quadratic φ(x) = ½xᵀAx − bᵀx over the trajectory, with
-φ evaluated from the residual identity A·x = b − r (two scalar tree-dots per
-iteration, no operator applications, no loss evaluations). Martens (2010)
-backtracks over saved CG iterates with true-loss evaluations; the paper
-omits it as too expensive — this form is free. For CG on an SPD system φ is
-monotone so best == last; for Bi-CG-STAB (non-monotone) it matters.
+All three are thin recurrence definitions over a ``krylov`` vector backend:
 
-Everything is a ``lax.while_loop`` over pytree carries — one jittable program,
-one all-reduce per operator application under pjit (the paper's per-CG-
-iteration MPI reduce).
+* ``backend=None`` / ``"tree"`` — pytree iterates, sharding-preserving leaf
+  ops (the original representation; right under pjit with sharded params);
+* ``krylov.get_backend("flat", template=b)`` — iterates ravelled once per
+  solve into a flat f32 buffer, recurrences executed by the fused Pallas
+  kernels (``kernels/cg_fused.py`` via ``kernels/ops.py``), interpret-mode
+  off-TPU. Wins when the Krylov state is per-chip replicated (pure data
+  parallelism) and the inner loop is HBM-bandwidth-bound: the fusions remove
+  whole HBM passes over model-sized vectors.
+
+The shared machinery — negative-curvature probe, free CG-backtracking
+(φ-best tracking via the residual identity A·x = b − r), breakdown guards —
+lives in ``krylov.py`` and exists exactly once. Every solver returns the
+same ``KrylovResult`` (pytree-typed, regardless of backend).
+
+Everything is a ``lax.while_loop`` over backend carries — one jittable
+program, one all-reduce per operator application under pjit (the paper's
+per-CG-iteration MPI reduce).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .tree_math import (
-    tree_axpy,
-    tree_axpby,
-    tree_dot,
-    tree_norm,
-    tree_scale,
-    tree_where,
-    tree_zeros_like,
+from .krylov import (
+    EPS as _EPS,
+    BestState,
+    NCState,
+    best_init,
+    best_update,
+    get_backend,
+    guard_div,
+    nc_init,
+    nc_probe,
+    phi_value,
 )
+from .tree_math import tree_dot, tree_scale, tree_zeros_like
 
 Op = Callable[[Any], Any]
-
-_EPS = 1e-20
 
 
 class KrylovResult(NamedTuple):
@@ -64,185 +79,159 @@ class KrylovResult(NamedTuple):
     residual: jax.Array    # final ‖b - A x‖
 
 
-def cg(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3) -> KrylovResult:
+def _resolve(backend):
+    return get_backend("tree") if backend is None else backend
+
+
+def _cg_engine(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float,
+               backend) -> KrylovResult:
+    """(P)CG body shared by ``cg`` and ``pcg``: M_inv=None ⇒ identity."""
+    be = _resolve(backend)
+    A_ = be.wrap_op(A)
+    b_ = be.lift(b)
+    m = None if M_inv is None else be.lift(M_inv)
+    prec = (lambda r: be.mul(m, r)) if m is not None else (lambda r: r)
+
+    b_norm = be.norm(b_)
+    x0_ = be.lift(x0)
+    r0 = be.sub(b_, A_(x0_))
+    z0 = prec(r0)
+    rz0, rr0 = be.dot2(z0, r0)  # (<z0,r0>, <r0,r0>); equal for identity M
+
+    def cond(carry):
+        (_, _, _, _, _, k, done, _) = carry
+        return jnp.logical_and(k < max_iters, jnp.logical_not(done))
+
+    def body(carry):
+        x, r, p, rz, rr, k, done, nc = carry
+        Ap = A_(p)
+        pAp, p_sq = be.dot2(Ap, p)
+        nc = nc_probe(be, p, pAp, p_sq, lam, nc)
+        # Martens truncation: stop when the damped system goes indefinite
+        # (negative curvature of the damped operator breaks CG itself; of
+        # the raw operator it is a saddle-escape direction — nc_probe above
+        # captures the rawest one).
+        trunc = pAp <= _EPS
+        alpha = rz / jnp.maximum(pAp, _EPS)
+        x_new = be.axpy(alpha, p, x)
+        r_new, _, rr_new = be.update_residual(r, Ap, alpha)  # r − α·Ap, ‖r‖²
+        z_new = prec(r_new)
+        rz_new = rr_new if m is None else be.dot(r_new, z_new)
+        beta = rz_new / jnp.maximum(rz, _EPS)
+        p_new = be.axpy(beta, p, z_new)
+        x = be.where(trunc, x, x_new)
+        r = be.where(trunc, r, r_new)
+        p = be.where(trunc, p, p_new)
+        rz_out = jnp.where(trunc, rz, rz_new)
+        rr_out = jnp.where(trunc, rr, rr_new)
+        done_new = jnp.logical_or(trunc, jnp.sqrt(rr_new) < tol * b_norm)
+        return (x, r, p, rz_out, rr_out, k + 1, done_new, nc)
+
+    init = (
+        x0_, r0, z0, rz0, rr0, jnp.zeros((), jnp.int32),
+        jnp.sqrt(rr0) < tol * b_norm, nc_init(be, b_),
+    )
+    x, r, _, _, rr, k, _, nc = jax.lax.while_loop(cond, body, init)
+    # (P)CG on the (damped, PSD-unless-truncated) system is φ-monotone:
+    # best == last.
+    x, r, nc_dir = be.lower(x), be.lower(r), be.lower(nc.dir)
+    return KrylovResult(x, r, x, r, nc_dir, nc.found, nc.curv, k, jnp.sqrt(rr))
+
+
+def cg(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
+       backend=None) -> KrylovResult:
     """Conjugate gradients with negative-curvature capture.
 
     ``A`` is the damped operator v ↦ G v + λ v; ``lam`` is λ (used to convert
     damped curvature back to raw curvature for the NC test, matching the
     paper's dᵀHd < 0 criterion on the *stochastic Hessian*).
     """
-    b_norm = tree_norm(b)
-    r0 = jax.tree_util.tree_map(jnp.subtract, b, A(x0))
-
-    def cond(carry):
-        (_, _, _, rs, k, done, _, _, _) = carry
-        return jnp.logical_and(k < max_iters, jnp.logical_not(done))
-
-    def body(carry):
-        x, r, p, rs, k, done, nc_found, nc_dir, nc_curv = carry
-        Ap = A(p)
-        pAp = tree_dot(p, Ap)
-        p_sq = tree_dot(p, p)
-        raw_curv = (pAp - lam * p_sq) / jnp.maximum(p_sq, _EPS)
-        # Negative curvature of the *damped* operator breaks CG itself; of the
-        # raw operator it is a saddle-escape direction. Capture the rawest one.
-        is_nc = raw_curv < 0.0
-        better = jnp.logical_and(is_nc, raw_curv < nc_curv)
-        nc_dir = tree_where(better, tree_scale(1.0 / jnp.sqrt(jnp.maximum(p_sq, _EPS)), p), nc_dir)
-        nc_curv = jnp.where(better, raw_curv, nc_curv)
-        nc_found = jnp.logical_or(nc_found, is_nc)
-        # Martens truncation: stop when the damped system goes indefinite.
-        trunc = pAp <= _EPS
-        alpha = rs / jnp.maximum(pAp, _EPS)
-        x_new = tree_axpy(alpha, p, x)
-        r_new = tree_axpy(-alpha, Ap, r)
-        rs_new = tree_dot(r_new, r_new)
-        beta = rs_new / jnp.maximum(rs, _EPS)
-        p_new = tree_axpy(beta, p, r_new)
-        x = tree_where(trunc, x, x_new)
-        r = tree_where(trunc, r, r_new)
-        p = tree_where(trunc, p, p_new)
-        rs_out = jnp.where(trunc, rs, rs_new)
-        done_new = jnp.logical_or(trunc, jnp.sqrt(rs_new) < tol * b_norm)
-        return (x, r, p, rs_out, k + 1, done_new, nc_found, nc_dir, nc_curv)
-
-    rs0 = tree_dot(r0, r0)
-    init = (
-        x0, r0, r0, rs0, jnp.zeros((), jnp.int32), rs0 < (tol * b_norm) ** 2,
-        jnp.zeros((), bool), tree_zeros_like(b), jnp.zeros(()),
-    )
-    x, r, _, rs, k, _, nc_found, nc_dir, nc_curv = jax.lax.while_loop(cond, body, init)
-    # CG on the (damped, PSD-unless-truncated) system is φ-monotone: best=last
-    return KrylovResult(x, r, x, r, nc_dir, nc_found, nc_curv, k, jnp.sqrt(rs))
+    return _cg_engine(A, b, x0, lam=lam, M_inv=None, max_iters=max_iters,
+                      tol=tol, backend=backend)
 
 
-def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3) -> KrylovResult:
-    """Bi-CG-STAB (paper Algorithm 3) with free negative-curvature capture.
-
-    Solves the possibly-indefinite damped system. r0* is chosen as r0
-    (standard). Breakdown ((r, r0*) ≈ 0 or (As, As) ≈ 0) freezes the iterate
-    and terminates — the caller falls back to the best candidate so far.
-    """
-    b_norm = tree_norm(b)
-    r0 = jax.tree_util.tree_map(jnp.subtract, b, A(x0))
-    r0_star = r0
-
-    def phi_of(x, r):
-        """Quadratic model ½xᵀAx − bᵀx via A·x = b − r (no operator call)."""
-        return -0.5 * tree_dot(b, x) - 0.5 * tree_dot(x, r)
-
-    def probe_nc(d, Ad, nc_found, nc_dir, nc_curv):
-        d_sq = tree_dot(d, d)
-        raw = (tree_dot(d, Ad) - lam * d_sq) / jnp.maximum(d_sq, _EPS)
-        is_nc = raw < 0.0
-        better = jnp.logical_and(is_nc, raw < nc_curv)
-        nc_dir = tree_where(better, tree_scale(1.0 / jnp.sqrt(jnp.maximum(d_sq, _EPS)), d), nc_dir)
-        nc_curv = jnp.where(better, raw, nc_curv)
-        return jnp.logical_or(nc_found, is_nc), nc_dir, nc_curv
-
-    def cond(carry):
-        (_, _, _, _, k, done, _, _, _, _, _, _) = carry
-        return jnp.logical_and(k < max_iters, jnp.logical_not(done))
-
-    def body(carry):
-        (x, r, p, rho, k, done, nc_found, nc_dir, nc_curv,
-         x_best, r_best, phi_best) = carry
-        Ap = A(p)
-        nc_found, nc_dir, nc_curv = probe_nc(p, Ap, nc_found, nc_dir, nc_curv)
-        denom_a = tree_dot(Ap, r0_star)
-        breakdown_a = jnp.abs(denom_a) < _EPS
-        alpha = rho / jnp.where(breakdown_a, 1.0, denom_a)
-        s = tree_axpy(-alpha, Ap, r)                      # s_j = r_j − α A p_j
-        As = A(s)
-        nc_found, nc_dir, nc_curv = probe_nc(s, As, nc_found, nc_dir, nc_curv)
-        denom_g = tree_dot(As, As)
-        breakdown_g = denom_g < _EPS
-        gamma = tree_dot(s, As) / jnp.where(breakdown_g, 1.0, denom_g)
-        x_new = tree_axpy(gamma, s, tree_axpy(alpha, p, x))
-        r_new = tree_axpy(-gamma, As, s)                  # r_{j+1} = s − γ A s
-        rho_new = tree_dot(r_new, r0_star)
-        beta = (rho_new / jnp.where(jnp.abs(rho) < _EPS, 1.0, rho)) * (
-            alpha / jnp.where(jnp.abs(gamma) < _EPS, 1.0, gamma)
-        )
-        p_new = tree_axpy(beta, tree_axpy(-gamma, Ap, p), r_new)
-        breakdown = jnp.logical_or(breakdown_a, breakdown_g)
-        x = tree_where(breakdown, x, x_new)
-        r = tree_where(breakdown, r, r_new)
-        p = tree_where(breakdown, p, p_new)
-        rho_out = jnp.where(breakdown, rho, rho_new)
-        # free CG-backtracking: track the best-model iterate
-        phi = phi_of(x, r)
-        improved = jnp.logical_and(phi < phi_best, jnp.logical_not(breakdown))
-        x_best = tree_where(improved, x, x_best)
-        r_best = tree_where(improved, r, r_best)
-        phi_best = jnp.where(improved, phi, phi_best)
-        res = tree_norm(r)
-        done_new = jnp.logical_or(breakdown, res < tol * b_norm)
-        return (x, r, p, rho_out, k + 1, done_new, nc_found, nc_dir, nc_curv,
-                x_best, r_best, phi_best)
-
-    rho0 = tree_dot(r0, r0_star)
-    init = (
-        x0, r0, r0, rho0, jnp.zeros((), jnp.int32),
-        tree_norm(r0) < tol * b_norm,
-        jnp.zeros((), bool), tree_zeros_like(b), jnp.zeros(()),
-        x0, r0, phi_of(x0, r0),
-    )
-    (x, r, _, _, k, _, nc_found, nc_dir, nc_curv,
-     x_best, r_best, _) = jax.lax.while_loop(cond, body, init)
-    return KrylovResult(x, r, x_best, r_best, nc_dir, nc_found, nc_curv, k, tree_norm(r))
-
-
-def pcg(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float = 5e-3) -> KrylovResult:
+def pcg(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float = 5e-3,
+        backend=None) -> KrylovResult:
     """Jacobi-preconditioned CG (Chapelle & Erhan 2011; Martens 2010 §4.7).
 
     ``M_inv``: pytree of elementwise inverse-preconditioner values
     (e.g. 1/(diag(Ĥ)+λ)^α). Negative-curvature capture identical to ``cg``.
     """
-    mul = lambda m, v: jax.tree_util.tree_map(lambda mm, vv: mm * vv, m, v)
-    b_norm = tree_norm(b)
-    r0 = jax.tree_util.tree_map(jnp.subtract, b, A(x0))
-    z0 = mul(M_inv, r0)
+    return _cg_engine(A, b, x0, lam=lam, M_inv=M_inv, max_iters=max_iters,
+                      tol=tol, backend=backend)
+
+
+def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
+             M_inv=None, backend=None) -> KrylovResult:
+    """Bi-CG-STAB (paper Algorithm 3) with free negative-curvature capture.
+
+    Solves the possibly-indefinite damped system. r0* is chosen as r0
+    (standard). Breakdown ((r, r0*) ≈ 0 or (t, t) ≈ 0) freezes the iterate
+    and terminates — the caller falls back to the best candidate so far.
+
+    ``M_inv`` (optional) enables the right-preconditioned variant: the
+    recurrence runs on p̂ = M⁻¹p, ŝ = M⁻¹s (van der Vorst), which for
+    M = I is *exactly* plain Bi-CG-STAB — no fourth solver needed. The NC
+    probe acts on (p̂, Ap̂)/(ŝ, Aŝ): the directions that actually build x.
+    """
+    be = _resolve(backend)
+    A_ = be.wrap_op(A)
+    b_ = be.lift(b)
+    m = None if M_inv is None else be.lift(M_inv)
+    prec = (lambda r: be.mul(m, r)) if m is not None else (lambda r: r)
+
+    b_norm = be.norm(b_)
+    x0_ = be.lift(x0)
+    r0 = be.sub(b_, A_(x0_))
+    r0_star = r0
 
     def cond(carry):
-        (_, _, _, _, rz, k, done, _, _, _) = carry
+        (_, _, _, _, k, done, _, _) = carry
         return jnp.logical_and(k < max_iters, jnp.logical_not(done))
 
     def body(carry):
-        x, r, z, p, rz, k, done, nc_found, nc_dir, nc_curv = carry
-        Ap = A(p)
-        pAp = tree_dot(p, Ap)
-        p_sq = tree_dot(p, p)
-        raw_curv = (pAp - lam * p_sq) / jnp.maximum(p_sq, _EPS)
-        is_nc = raw_curv < 0.0
-        better = jnp.logical_and(is_nc, raw_curv < nc_curv)
-        nc_dir = tree_where(better, tree_scale(1.0 / jnp.sqrt(jnp.maximum(p_sq, _EPS)), p), nc_dir)
-        nc_curv = jnp.where(better, raw_curv, nc_curv)
-        nc_found = jnp.logical_or(nc_found, is_nc)
-        trunc = pAp <= _EPS
-        alpha = rz / jnp.maximum(pAp, _EPS)
-        x_new = tree_axpy(alpha, p, x)
-        r_new = tree_axpy(-alpha, Ap, r)
-        z_new = mul(M_inv, r_new)
-        rz_new = tree_dot(r_new, z_new)
-        beta = rz_new / jnp.maximum(rz, _EPS)
-        p_new = tree_axpy(beta, p, z_new)
-        x = tree_where(trunc, x, x_new)
-        r = tree_where(trunc, r, r_new)
-        z = tree_where(trunc, z, z_new)
-        p = tree_where(trunc, p, p_new)
-        rz_out = jnp.where(trunc, rz, rz_new)
-        done_new = jnp.logical_or(trunc, tree_norm(r_new) < tol * b_norm)
-        return (x, r, z, p, rz_out, k + 1, done_new, nc_found, nc_dir, nc_curv)
+        x, r, p, rho, k, done, nc, best = carry
+        phat = prec(p)
+        v = A_(phat)                                     # A p̂_j
+        v_phat, phat_sq = be.dot2(v, phat)
+        nc = nc_probe(be, phat, v_phat, phat_sq, lam, nc)
+        denom_a = be.dot(v, r0_star)
+        alpha, breakdown_a = guard_div(rho, denom_a)
+        s = be.axpy(-alpha, v, r)                        # s_j = r_j − α A p̂_j
+        shat = prec(s)
+        t = A_(shat)                                     # A ŝ_j
+        t_shat, shat_sq = be.dot2(t, shat)
+        nc = nc_probe(be, shat, t_shat, shat_sq, lam, nc)
+        st_dot, tt = be.dot2(s, t)                       # (<s,t>, <t,t>)
+        breakdown_g = tt < _EPS
+        gamma = st_dot / jnp.where(breakdown_g, 1.0, tt)
+        x_new = be.fused_update(x, phat, shat, alpha, gamma)   # x + αp̂ + γŝ
+        # r_{j+1} = s − γ t, fused with the dots it feeds: ⟨r,r0*⟩, ⟨r,r⟩
+        r_new, rho_new, rr_new = be.update_residual(s, t, gamma, r0s=r0_star)
+        beta = (rho_new / jnp.where(jnp.abs(rho) < _EPS, 1.0, rho)) * (
+            alpha / jnp.where(jnp.abs(gamma) < _EPS, 1.0, gamma)
+        )
+        p_new = be.fused_update(r_new, p, v, beta, -beta * gamma)
+        breakdown = jnp.logical_or(breakdown_a, breakdown_g)
+        x = be.where(breakdown, x, x_new)
+        r = be.where(breakdown, r, r_new)
+        p = be.where(breakdown, p, p_new)
+        rho_out = jnp.where(breakdown, rho, rho_new)
+        # free CG-backtracking: track the best-model iterate
+        phi = phi_value(be, b_, x, r)
+        best = best_update(be, x, r, phi, jnp.logical_not(breakdown), best)
+        done_new = jnp.logical_or(breakdown, jnp.sqrt(rr_new) < tol * b_norm)
+        return (x, r, p, rho_out, k + 1, done_new, nc, best)
 
-    rz0 = tree_dot(r0, z0)
     init = (
-        x0, r0, z0, z0, rz0, jnp.zeros((), jnp.int32),
-        tree_norm(r0) < tol * b_norm,
-        jnp.zeros((), bool), tree_zeros_like(b), jnp.zeros(()),
+        x0_, r0, r0, be.dot(r0, r0_star), jnp.zeros((), jnp.int32),
+        be.norm(r0) < tol * b_norm, nc_init(be, b_), best_init(be, b_, x0_, r0),
     )
-    x, r, _, _, _, k, _, nc_found, nc_dir, nc_curv = jax.lax.while_loop(cond, body, init)
-    return KrylovResult(x, r, x, r, nc_dir, nc_found, nc_curv, k, tree_norm(r))
+    x, r, _, _, k, _, nc, best = jax.lax.while_loop(cond, body, init)
+    return KrylovResult(
+        be.lower(x), be.lower(r), be.lower(best.x), be.lower(best.r),
+        be.lower(nc.dir), nc.found, nc.curv, k, be.norm(r),
+    )
 
 
 def hutchinson_diag(op: Op, like, step, *, samples: int = 1):

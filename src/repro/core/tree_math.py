@@ -1,11 +1,14 @@
 """Pytree vector algebra used by the Krylov solvers.
 
-All Krylov iterates (r, p, s, x, ...) are pytrees with the same structure as
-the model parameters. Keeping them as pytrees (instead of ravelling into one
-flat vector) preserves per-tensor shardings under pjit — every dot product
-lowers to a per-shard reduction + one small all-reduce, and every axpy is
-embarrassingly parallel. This is the TPU-native analogue of the paper's
-"reduce to root" MPI calls.
+This is the execution layer of the *tree* Krylov vector backend
+(``core.krylov.TreeVectorBackend``): iterates (r, p, s, x, ...) stay pytrees
+with the same structure as the model parameters. Keeping them as pytrees
+(instead of ravelling into one flat vector) preserves per-tensor shardings
+under pjit — every dot product lowers to a per-shard reduction + one small
+all-reduce, and every axpy is embarrassingly parallel. This is the
+TPU-native analogue of the paper's "reduce to root" MPI calls. (The *flat*
+backend makes the opposite trade: ravel once, fused Pallas recurrences —
+see core/krylov.py for when each wins.)
 """
 from __future__ import annotations
 

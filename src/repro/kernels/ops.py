@@ -1,5 +1,23 @@
 """Jit'd public wrappers for the Pallas kernels.
 
+These are the execution layer of the *flat* Krylov vector backend
+(``core.krylov.FlatVectorBackend``): the solvers in ``core/solvers.py``
+ravel their iterates into flat f32 buffers once per solve and run every
+axpy/dot recurrence through these fusions —
+
+  * ``bicgstab_x_update``     — y + α·u + γ·v  (Bi-CG-STAB x and p updates),
+  * ``bicgstab_residual_dots``— r = s − γ·t fused with ⟨r,r0*⟩ and ⟨r,r⟩
+                                (also the CG residual update + ‖r‖²),
+  * ``dot2``                  — ⟨u,v⟩, ⟨v,v⟩ in one pass (curvature probes,
+                                Bi-CG-STAB ω, CG α denominators).
+
+Each fusion removes whole HBM passes over model-sized vectors relative to
+the per-leaf pytree path (see cg_fused.py for the traffic accounting) — the
+flat backend wins when Krylov state is per-chip replicated (pure data
+parallelism) and the inner loop is bandwidth-bound. The pytree ("tree")
+backend keeps per-tensor shardings instead and wins when params are sharded
+under pjit. ``benchmarks/kernels_bench.py`` compares both end-to-end.
+
 ``interpret=True`` runs the kernel bodies in Python on CPU (how this repo
 validates them); on a real TPU pass interpret=False (default resolves from
 the backend).

@@ -36,6 +36,7 @@ def train(
     hvp_batch_frac: float = 0.25,
     max_cg_iters: int = 8,
     precondition: bool = False,
+    krylov_backend: str = "tree",
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
     log_fn=print,
@@ -45,6 +46,7 @@ def train(
     opt_cfg = HFOptConfig(
         name=solver, lr=lr, hvp_batch_frac=hvp_batch_frac,
         max_cg_iters=max_cg_iters, precondition=precondition,
+        krylov_backend=krylov_backend,
     )
     opt = make_optimizer(
         opt_cfg, model.loss_fn, model_out_fn=model.logits_fn,
@@ -96,7 +98,10 @@ def main():
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--max-cg-iters", type=int, default=8)
     ap.add_argument("--precondition", action="store_true",
-                    help="Jacobi PCG for the CG-family solvers")
+                    help="Jacobi preconditioning (PCG / preconditioned Bi-CG-STAB)")
+    ap.add_argument("--krylov-backend", default="tree", choices=["tree", "flat"],
+                    help="Krylov vector backend: sharding-preserving pytrees "
+                         "or flat buffers through the fused Pallas kernels")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--history-out", default=None)
@@ -106,6 +111,7 @@ def main():
         args.arch, smoke=args.smoke, solver=args.solver, steps=args.steps,
         batch_size=args.batch_size, seq_len=args.seq_len, lr=args.lr,
         max_cg_iters=args.max_cg_iters, precondition=args.precondition,
+        krylov_backend=args.krylov_backend,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     if args.history_out:

@@ -18,7 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .attention import KVCache, _split_heads

@@ -62,6 +62,7 @@ def make_optimizer(
         init_damping=opt.init_damping,
         cg_decay=opt.cg_decay,
         precondition=opt.precondition,
+        krylov_backend=opt.krylov_backend,
     )
 
     def init(params):

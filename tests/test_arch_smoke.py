@@ -12,6 +12,11 @@ from repro.core import HFConfig, hf_init, hf_step
 from repro.data import lm_batch
 from repro.models import build_model
 
+# Full-architecture sweep (forward + HF step per family) is several minutes
+# of jit compiles — out of the tier-1 budget. Core hf_step coverage stays in
+# tier-1 via test_system / test_krylov_backends / test_preconditioner.
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

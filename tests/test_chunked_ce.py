@@ -10,6 +10,8 @@ from repro.core.tree_math import tree_dot, tree_random_like
 from repro.data import lm_batch
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # grad+HVP through full LM stacks: ~10s/case
+
 
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "granite-moe-1b-a400m"])
 @pytest.mark.parametrize("chunk", [64, 256])

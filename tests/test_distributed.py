@@ -72,6 +72,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # subprocess with 8 fake devices + full HF jit: ~17s
 def test_shard_map_hf_matches_single_device():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

@@ -1,0 +1,207 @@
+"""Tree vs flat Krylov backend equivalence.
+
+The flat backend ravels iterates once per solve and runs the recurrences
+through the fused Pallas kernels (interpret mode on CPU); the tree backend
+is the original sharding-preserving pytree path. Same math, same
+KrylovResult — differences are reduction-order fp noise only.
+
+The hf_step equivalence runs at init_damping=5.0: on a *barely damped*
+indefinite Hessian, Bi-CG-STAB chaotically amplifies reduction-order noise
+(same effect test_distributed.py documents for the 8-device schedule), so
+backend equivalence — like distributed equivalence — is only meaningful in
+the well-conditioned regime.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HFConfig, hf_init, hf_step
+from repro.core.krylov import FlatVectorBackend, get_backend
+from repro.core.solvers import bicgstab, cg, pcg
+from repro.core.tree_math import tree_norm, tree_random_like, tree_sub
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+
+def _vec(x):
+    """Two-leaf pytree (vector + matrix leaf) to exercise ravel/unravel."""
+    x = np.asarray(x, np.float32)
+    return {"a": jnp.asarray(x[:5]), "b": jnp.asarray(x[5:]).reshape(3, 3)}
+
+
+def _unvec(t):
+    return np.concatenate([np.asarray(t["a"]).ravel(), np.asarray(t["b"]).ravel()])
+
+
+def _mat_op(M):
+    def op(v):
+        f = jnp.concatenate([v["a"].ravel(), v["b"].ravel()])
+        out = M @ f
+        return {"a": out[:5], "b": out[5:].reshape(3, 3)}
+    return op
+
+
+def _flat_be(template):
+    return get_backend("flat", template=template, interpret=True)
+
+
+class TestFlatBackendRepresentation:
+    def test_lift_lower_roundtrip(self):
+        t = _vec(np.arange(14))
+        be = _flat_be(t)
+        flat = be.lift(t)
+        assert flat.shape == (14,) and flat.dtype == jnp.float32
+        back = be.lower(flat)
+        for k in t:
+            np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(t[k]))
+
+    def test_wrap_op_matches_tree_op(self):
+        rng = np.random.RandomState(0)
+        M = jnp.asarray(rng.randn(14, 14).astype(np.float32))
+        t = _vec(rng.randn(14))
+        be = _flat_be(t)
+        out = be.wrap_op(_mat_op(M))(be.lift(t))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(M @ jnp.asarray(_unvec(t))), rtol=1e-6)
+
+    def test_fused_ops_match_tree_ops(self):
+        rng = np.random.RandomState(1)
+        tree_be = get_backend("tree")
+        y, u, v = (_vec(rng.randn(14)) for _ in range(3))
+        be = _flat_be(y)
+        yf, uf, vf = be.lift(y), be.lift(u), be.lift(v)
+        np.testing.assert_allclose(
+            np.asarray(be.fused_update(yf, uf, vf, 0.3, -1.7)),
+            _unvec(tree_be.fused_update(y, u, v, 0.3, -1.7)), rtol=1e-6, atol=1e-6)
+        rf, d1f, d2f = be.update_residual(yf, uf, 0.6, r0s=vf)
+        rt, d1t, d2t = tree_be.update_residual(y, u, 0.6, r0s=v)
+        np.testing.assert_allclose(np.asarray(rf), _unvec(rt), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(float(d1f), float(d1t), rtol=1e-5)
+        np.testing.assert_allclose(float(d2f), float(d2t), rtol=1e-5)
+        np.testing.assert_allclose(
+            [float(x) for x in be.dot2(uf, vf)],
+            [float(x) for x in tree_be.dot2(u, v)], rtol=1e-5)
+
+
+class TestSolverEquivalence:
+    """Each solver, both backends, same KrylovResult (to fp noise)."""
+
+    def _spd(self):
+        rng = np.random.RandomState(2)
+        Q = rng.randn(14, 14).astype(np.float32)
+        M = jnp.asarray(Q @ Q.T + 14 * np.eye(14, dtype=np.float32))
+        return M, _vec(rng.randn(14)), _vec(np.zeros(14))
+
+    def test_cg(self):
+        M, b, x0 = self._spd()
+        rt = cg(_mat_op(M), b, x0, lam=0.0, max_iters=40, tol=1e-8)
+        rf = cg(_mat_op(M), b, x0, lam=0.0, max_iters=40, tol=1e-8,
+                backend=_flat_be(b))
+        assert int(rt.iters) == int(rf.iters)
+        np.testing.assert_allclose(_unvec(rt.x), _unvec(rf.x), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(_unvec(rt.r), _unvec(rf.r), atol=1e-4)
+
+    def test_pcg(self):
+        M, b, x0 = self._spd()
+        m_inv = {"a": 1.0 / jnp.diag(M)[:5], "b": (1.0 / jnp.diag(M)[5:]).reshape(3, 3)}
+        rt = pcg(_mat_op(M), b, x0, lam=0.0, M_inv=m_inv, max_iters=40, tol=1e-8)
+        rf = pcg(_mat_op(M), b, x0, lam=0.0, M_inv=m_inv, max_iters=40, tol=1e-8,
+                 backend=_flat_be(b))
+        assert int(rt.iters) == int(rf.iters)
+        np.testing.assert_allclose(_unvec(rt.x), _unvec(rf.x), rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("precondition", [False, True])
+    def test_bicgstab(self, precondition):
+        M, b, x0 = self._spd()
+        m_inv = None
+        if precondition:
+            m_inv = {"a": 1.0 / jnp.diag(M)[:5], "b": (1.0 / jnp.diag(M)[5:]).reshape(3, 3)}
+        rt = bicgstab(_mat_op(M), b, x0, lam=0.0, max_iters=40, tol=1e-8, M_inv=m_inv)
+        rf = bicgstab(_mat_op(M), b, x0, lam=0.0, max_iters=40, tol=1e-8, M_inv=m_inv,
+                      backend=_flat_be(b))
+        assert int(rt.iters) == int(rf.iters)
+        np.testing.assert_allclose(_unvec(rt.x), _unvec(rf.x), rtol=1e-4, atol=1e-5)
+        # near-tied φ values along the trajectory make the *argmin* iterate
+        # noise-sensitive; the invariant is that both backends' best iterates
+        # reach the same quadratic-model value φ(x) = ½xᵀMx − bᵀx.
+        def phi(x):
+            return 0.5 * float(x @ np.asarray(M) @ x) - float(_unvec(b) @ x)
+        np.testing.assert_allclose(phi(_unvec(rt.x_best)), phi(_unvec(rf.x_best)),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_nc_capture_matches_on_indefinite(self):
+        d = np.array([4.0, -2.0, 1.0, -0.5] + [1.0] * 10, np.float32)
+        M = jnp.asarray(np.diag(d))
+        rng = np.random.RandomState(3)
+        b, x0 = _vec(rng.randn(14)), _vec(np.zeros(14))
+        rt = bicgstab(_mat_op(M), b, x0, lam=0.0, max_iters=3, tol=1e-8)
+        rf = bicgstab(_mat_op(M), b, x0, lam=0.0, max_iters=3, tol=1e-8,
+                      backend=_flat_be(b))
+        assert bool(rt.nc_found) and bool(rf.nc_found)
+        np.testing.assert_allclose(float(rt.nc_curv), float(rf.nc_curv),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestHFStepEquivalence:
+    """The tentpole acceptance test: one hf_step on a small MLP, flat fused
+    backend (interpret) vs pytree backend — same delta, same metrics to 1e-5,
+    for all four solver variants."""
+
+    SOLVERS = ["gn_cg", "hessian_cg", "hybrid_cg", "bicgstab"]
+
+    def _setup(self):
+        model = build_mlp((8, 16, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 64, 8, 4)
+        params = model.init(jax.random.PRNGKey(1))
+        return model, data, params
+
+    @pytest.mark.parametrize("solver", SOLVERS)
+    def test_step_matches_across_backends(self, solver):
+        model, data, params = self._setup()
+        out = {}
+        for backend in ("tree", "flat"):
+            cfg = HFConfig(solver=solver, max_cg_iters=8, init_damping=5.0,
+                           krylov_backend=backend)
+            state = hf_init(params, cfg)
+            step = jax.jit(lambda p, s, cfg=cfg: hf_step(
+                model.loss_fn, p, s, data, data, cfg,
+                model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+            p2, _, metrics = step(params, state)
+            out[backend] = (p2, metrics)
+        pt, mt = out["tree"]
+        pf, mf = out["flat"]
+        # identical delta: params stepped to the same point
+        for a, b in zip(jax.tree_util.tree_leaves(pt), jax.tree_util.tree_leaves(pf)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+        assert int(mt["cg_iters"]) == int(mf["cg_iters"])
+        for k in mt:
+            np.testing.assert_allclose(float(mt[k]), float(mf[k]),
+                                       rtol=1e-5, atol=1e-5, err_msg=k)
+
+    def test_flat_backend_trains(self):
+        """A few full steps with the fused backend actually reduce the loss."""
+        model, data, params = self._setup()
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=6, krylov_backend="flat")
+        state = hf_init(params, cfg)
+        step = jax.jit(lambda p, s: hf_step(model.loss_fn, p, s, data, data, cfg))
+        losses = []
+        for _ in range(6):
+            params, state, m = step(params, state)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.7 * losses[0]
+
+
+class TestConfigValidation:
+    def test_bad_backend_name_raises(self):
+        with pytest.raises(ValueError, match="krylov_backend"):
+            HFConfig(krylov_backend="ravel")
+
+    def test_get_backend_flat_requires_template(self):
+        with pytest.raises(ValueError, match="template"):
+            get_backend("flat")
+
+    def test_get_backend_unknown_name(self):
+        with pytest.raises(ValueError, match="backend"):
+            get_backend("dense")

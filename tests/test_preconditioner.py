@@ -1,10 +1,11 @@
-"""Jacobi-preconditioned CG + Hutchinson diagonal estimation."""
+"""Jacobi-preconditioned Krylov solvers + Hutchinson diagonal estimation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import HFConfig, hf_init, hf_step
-from repro.core.solvers import cg, hutchinson_diag, pcg
+from repro.core.solvers import bicgstab, cg, hutchinson_diag, pcg
 from repro.core.tree_math import tree_norm, tree_sub
 from repro.data import classification_dataset
 from repro.models import build_mlp
@@ -33,6 +34,56 @@ def test_pcg_beats_cg_on_ill_conditioned_diagonal():
     assert err_pre < err_plain * 1e-2   # exact Jacobi solves diagonal in 1 it
 
 
+def test_pcg_identity_preconditioner_equals_cg():
+    """With M⁻¹ = I, pcg IS cg — identical iterates at every budget (the
+    engine body is shared; the identity multiply is exact in fp)."""
+    rng = np.random.RandomState(5)
+    Q = rng.randn(12, 12).astype(np.float32)
+    M = jnp.asarray(Q @ Q.T + 12 * np.eye(12, dtype=np.float32))
+    b = _vec(rng.randn(12))
+    ident = {"x": jnp.ones(12, jnp.float32)}
+    for iters in (1, 3, 7, 20):
+        plain = cg(_mat_op(M), b, _vec(np.zeros(12)), lam=0.0,
+                   max_iters=iters, tol=1e-10)
+        pre = pcg(_mat_op(M), b, _vec(np.zeros(12)), lam=0.0, M_inv=ident,
+                  max_iters=iters, tol=1e-10)
+        assert int(plain.iters) == int(pre.iters)
+        np.testing.assert_array_equal(np.asarray(plain.x["x"]), np.asarray(pre.x["x"]))
+        np.testing.assert_array_equal(np.asarray(plain.r["x"]), np.asarray(pre.r["x"]))
+
+
+def test_bicgstab_identity_preconditioner_is_plain_bicgstab():
+    """M_inv=None and M⁻¹=I take the same recurrence — bit-equal iterates."""
+    rng = np.random.RandomState(6)
+    M = jnp.diag(jnp.asarray(np.linspace(0.5, 8.0, 12), jnp.float32))
+    b = _vec(rng.randn(12))
+    ident = {"x": jnp.ones(12, jnp.float32)}
+    plain = bicgstab(_mat_op(M), b, _vec(np.zeros(12)), lam=0.0,
+                     max_iters=9, tol=1e-10)
+    pre = bicgstab(_mat_op(M), b, _vec(np.zeros(12)), lam=0.0,
+                   max_iters=9, tol=1e-10, M_inv=ident)
+    assert int(plain.iters) == int(pre.iters)
+    np.testing.assert_array_equal(np.asarray(plain.x["x"]), np.asarray(pre.x["x"]))
+
+
+def test_preconditioned_bicgstab_beats_plain_on_ill_conditioned():
+    """Exact Jacobi on a diagonal system: right-preconditioned Bi-CG-STAB
+    solves in one iteration where the plain solver is nowhere close."""
+    d = np.logspace(0, 4, 32).astype(np.float32)
+    M = jnp.diag(jnp.asarray(d))
+    rng = np.random.RandomState(7)
+    b = _vec(rng.randn(32))
+    x_star = {"x": b["x"] / d}
+    m_inv = {"x": 1.0 / jnp.asarray(d)}
+    plain = bicgstab(_mat_op(M), b, _vec(np.zeros(32)), lam=0.0,
+                     max_iters=4, tol=1e-12)
+    pre = bicgstab(_mat_op(M), b, _vec(np.zeros(32)), lam=0.0,
+                   max_iters=4, tol=1e-12, M_inv=m_inv)
+    err_plain = float(tree_norm(tree_sub(plain.x, x_star)))
+    err_pre = float(tree_norm(tree_sub(pre.x, x_star)))
+    assert err_pre < err_plain * 1e-2
+
+
 def test_hutchinson_diag_estimates_diagonal():
     d = jnp.asarray(np.linspace(1.0, 10.0, 64), jnp.float32)
     op = _mat_op(jnp.diag(d))
@@ -41,10 +92,14 @@ def test_hutchinson_diag_estimates_diagonal():
     np.testing.assert_allclose(np.asarray(est["x"]), np.asarray(d), rtol=1e-5)
 
 
-def test_hf_with_preconditioning_trains():
+@pytest.mark.parametrize("solver", ["hessian_cg", "bicgstab"])
+def test_hf_with_preconditioning_trains(solver):
+    """precondition=True must actually engage for every solver — for
+    bicgstab it was silently ignored before the unified engine (the branch
+    order in hf_step dispatched to the unpreconditioned path)."""
     model = build_mlp((16, 32, 4))
     data = classification_dataset(jax.random.PRNGKey(0), 256, 16, 4)
-    cfg = HFConfig(solver="hessian_cg", max_cg_iters=6, precondition=True)
+    cfg = HFConfig(solver=solver, max_cg_iters=6, precondition=True)
     params = model.init(jax.random.PRNGKey(1))
     state = hf_init(params, cfg)
     step = jax.jit(lambda p, s: hf_step(model.loss_fn, p, s, data, data, cfg))
@@ -53,3 +108,22 @@ def test_hf_with_preconditioning_trains():
         params, state, m = step(params, state)
         losses.append(float(m["loss"]))
     assert losses[-1] < 0.6 * losses[0]
+
+
+def test_bicgstab_precondition_is_not_a_noop():
+    """hf_step(precondition=True, solver=bicgstab) must produce a different
+    (preconditioned) step than precondition=False on an ill-conditioned
+    problem — guards against the silent-ignore regression."""
+    model = build_mlp((16, 32, 4))
+    data = classification_dataset(jax.random.PRNGKey(0), 256, 16, 4)
+    params = model.init(jax.random.PRNGKey(1))
+    deltas = {}
+    for pre in (False, True):
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=6, precondition=pre,
+                       krylov_jitter=0.0)
+        state = hf_init(params, cfg)
+        p2, _, _ = jax.jit(lambda p, s, cfg=cfg: hf_step(
+            model.loss_fn, p, s, data, data, cfg))(params, state)
+        deltas[pre] = p2
+    diff = float(tree_norm(tree_sub(deltas[True], deltas[False])))
+    assert diff > 1e-6, "preconditioning silently ignored for bicgstab"

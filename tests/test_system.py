@@ -48,6 +48,7 @@ class TestMLPTraining:
             assert cur <= prev + 1e-5
             prev = cur
 
+    @pytest.mark.slow  # comparative convergence sweep (HF vs SGD budgets)
     def test_hf_beats_sgd_at_equal_communications(self):
         """The paper's core *systems* claim (Fig. 3 right): per unit of
         communication, distributed HF makes far more progress than
@@ -140,6 +141,7 @@ class TestServing:
                    gen_len=4, log_fn=lambda *a: None)
         np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
 
+    @pytest.mark.slow  # full launch.train driver: model build + several steps
     def test_train_driver(self):
         from repro.launch.train import train
         _, _, hist = train("qwen1.5-0.5b", smoke=True, solver="bicgstab",
