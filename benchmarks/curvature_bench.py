@@ -1,0 +1,313 @@
+"""Curvature-engine benchmarks: naive vs linearize-once vs chunked.
+
+  PYTHONPATH=src python benchmarks/curvature_bench.py [--tiny] [--out PATH]
+
+Measures, on the paper's Fig. 4 MLP (784-400-150-10):
+
+  1. **per-product** — one curvature product per application, in both the
+     per-call regime (operator applied as built: naive re-traces and
+     re-runs the primal forward+backward every call, linearize replays the
+     cached linear map) and a jitted-handle regime (params/batch as runtime
+     arguments; XLA overlaps much of the naive primal there, so the delta
+     is smaller — see module notes in core/curvature.py).
+  2. **solve** — a full fixed-length CG solve driving the operator once per
+     iteration (per-call dispatch, the paper's MPI-root schedule where each
+     CG iteration issues one product + one reduce). This is the acceptance
+     row: linearized vs naive speed-up.
+  3. **hf_step** — whole-step wall clock + compile time, curvature modes ×
+     both Krylov backends (tree / flat-Pallas-interpret). Inside one jitted
+     while_loop XLA's loop-invariant code motion can hoist the naive
+     primal, so in-jit mode deltas are small on straight solvers — the
+     hybrid solver's ``lax.cond`` (never hoisted) and compile times show
+     the structural win; the per-call rows show the schedule win.
+  4. **memory** — XLA compiled-memory analysis (temp bytes) of an hf_step
+     at 1× and 10× curvature batch, unchunked vs chunked: the chunked 10×
+     batch must stay ~flat (paper Fig. 4's large-batch regime at fixed
+     memory).
+
+Results go to ``BENCH_curvature.json`` (schema: EXPERIMENTS.md §Perf
+pair D). ``--tiny`` is the CI smoke mode: smallest shapes, 1 rep, same
+code paths, same JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HFConfig, hf_init, hf_step
+from repro.core.curvature import make_gnvp_op, make_hvp_op
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+
+def _time_it(fn, *args, reps=3):
+    """Median-of-reps after one warmup (this box has load spikes; the
+    median is the stable statistic)."""
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.time() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _ops(model, params, batch, mode, chunk):
+    kw = dict(mode=mode, chunk_size=chunk)
+    hvp = make_hvp_op(model.loss_fn, params, batch, **kw)
+    gnvp = make_gnvp_op(model.logits_fn, model.out_loss_fn, params, batch, **kw)
+    return hvp, gnvp
+
+
+def bench_per_product(model, params, batch, chunk, reps, log):
+    """One product per operator application, two dispatch regimes.
+
+    * ``percall`` — the operator exactly as ``make_hvp``/``make_gnvp``
+      return it, applied eagerly per Krylov iteration: naive re-traces and
+      re-runs the primal forward+backward every call; linearize replays the
+      once-built linear map. This is the cost the ISSUE's "per-call
+      retracing" names and the regime the solve row below uses.
+    * ``jit`` — a jitted handle with params/batch as *runtime arguments*
+      (they change every outer step — baking them in would let XLA
+      constant-fold the naive primal away at compile time). Inside one jit,
+      XLA can still overlap/hoist much of the naive primal, so this delta
+      is smaller and cache-noise-sensitive; reported for completeness.
+    """
+    v = jax.tree_util.tree_map(lambda p: jnp.ones_like(p, jnp.float32), params)
+    rows = []
+    for mode in ("naive", "linearize", "chunked"):
+        t_build = time.time()
+        hvp, gnvp = _ops(model, params, batch, mode, chunk)
+        build_s = time.time() - t_build  # linearize/chunked: eager primal pass
+        jitted = {
+            "hvp": (jax.jit(lambda p, b, u: make_hvp_op(
+                model.loss_fn, p, b, mode="naive")(u))
+                    if mode == "naive" else jax.jit(hvp)),
+            "gnvp": (jax.jit(lambda p, b, u: make_gnvp_op(
+                model.logits_fn, model.out_loss_fn, p, b, mode="naive")(u))
+                     if mode == "naive" else jax.jit(gnvp)),
+        }
+        for op_name, op in (("hvp", hvp), ("gnvp", gnvp)):
+            t_pc = _time_it(op, v, reps=reps)
+            if mode == "naive":
+                t_jit = _time_it(jitted[op_name], params, batch, v, reps=reps)
+            else:
+                t_jit = _time_it(jitted[op_name], v, reps=reps)
+            rows.append({"op": op_name, "mode": mode,
+                         "chunk": chunk if mode == "chunked" else None,
+                         "percall_us": t_pc * 1e6, "jit_us": t_jit * 1e6,
+                         "build_s": round(build_s, 4)})
+            log(f"  per-product {op_name:4s} {mode:9s} "
+                f"percall {t_pc*1e6:9.0f} us   jit {t_jit*1e6:9.0f} us")
+    return rows
+
+
+@jax.jit
+def _bicgstab_update(x, r, p, r0s, rho, v, t_vec, s, alpha):
+    """Tail of one Bi-CG-STAB iteration given the two operator products
+    (v = A p̂, t = A ŝ). Mode-independent flat-f32 recurrence, jitted once,
+    so the solve comparison isolates the operator cost (same ravel-once
+    representation the flat Krylov backend uses)."""
+    omega = (t_vec @ s) / jnp.maximum(t_vec @ t_vec, 1e-20)
+    x = x + alpha * p + omega * s
+    r = s - omega * t_vec
+    rho_new = r @ r0s
+    beta = (rho_new / jnp.where(jnp.abs(rho) < 1e-20, 1.0, rho)) * (
+        alpha / jnp.where(jnp.abs(omega) < 1e-20, 1.0, omega)
+    )
+    p = r + beta * (p - omega * v)
+    return x, r, p, rho_new
+
+
+def _percall_bicgstab(damped_flat_op, b_flat, iters):
+    """Python-driven Bi-CG-STAB (paper Algorithm 3), fixed iteration count,
+    one operator dispatch per product — the paper's MPI-root schedule (two
+    products + two reduces per iteration). The operator is applied exactly
+    as ``make_hvp(mode=...)`` returns it: naive re-traces and re-runs the
+    primal every call, linearize replays the cached linear map."""
+    x = jnp.zeros_like(b_flat)
+    r = b_flat
+    r0s = b_flat
+    p = b_flat
+    rho = r @ r0s
+    for _ in range(iters):
+        v = damped_flat_op(p)                        # A p̂_j
+        alpha = rho / (v @ r0s)
+        s = r - alpha * v
+        t_vec = damped_flat_op(s)                    # A ŝ_j
+        x, r, p, rho = _bicgstab_update(x, r, p, r0s, rho, v, t_vec, s, alpha)
+    return x
+
+
+def bench_solve(model, params, batch, iters, chunk, reps, log):
+    """Acceptance row: 16-iteration Krylov solve (the paper's Bi-CG-STAB),
+    per-call dispatch."""
+    from jax.flatten_util import ravel_pytree
+
+    g = jax.grad(model.loss_fn)(params, batch)
+    b = jax.tree_util.tree_map(lambda x: -x.astype(jnp.float32), g)
+    b_flat, unravel = ravel_pytree(b)
+    lam = jnp.asarray(1.0, jnp.float32)
+    out = {"solver": "bicgstab_percall", "iters": iters}
+    for mode in ("naive", "linearize", "chunked"):
+        hvp, _ = _ops(model, params, batch, mode, chunk)
+
+        def flat_op(vf, hvp=hvp):
+            # pytree boundary + damping charged to the operator side
+            # (identical for every mode)
+            return ravel_pytree(hvp(unravel(vf)))[0] + lam * vf
+
+        t = _time_it(lambda bb: _percall_bicgstab(flat_op, bb, iters),
+                     b_flat, reps=reps)
+        out[f"{mode}_s"] = round(t, 5)
+        log(f"  solve[{iters} it] {mode:9s} {t:8.4f} s")
+    out["speedup_linearize"] = round(out["naive_s"] / out["linearize_s"], 3)
+    out["speedup_chunked"] = round(out["naive_s"] / out["chunked_s"], 3)
+    log(f"  solve speedup linearize/naive = {out['speedup_linearize']:.2f}x")
+    return out
+
+
+def bench_hf_step(model, params, data, iters, chunk, reps, backends, log):
+    """Whole-jit hf_step across curvature modes × Krylov backends."""
+    rows = []
+    for backend in backends:
+        for mode in ("naive", "linearize", "chunked"):
+            cfg = HFConfig(solver="bicgstab", max_cg_iters=iters,
+                           krylov_backend=backend, curvature_mode=mode,
+                           curvature_chunk_size=chunk if mode == "chunked" else 0)
+            state = hf_init(params, cfg)
+            step = jax.jit(lambda p, s, b, cfg=cfg: hf_step(
+                model.loss_fn, p, s, b, b, cfg))
+            t0 = time.time()
+            jax.block_until_ready(step(params, state, data)[0])
+            compile_s = time.time() - t0
+            t = _time_it(lambda p, s, b: step(p, s, b)[0],
+                         params, state, data, reps=reps)
+            rows.append({"backend": backend, "mode": mode, "wall_s": round(t, 5),
+                         "compile_s": round(compile_s, 3)})
+            log(f"  hf_step {backend:4s}/{mode:9s} {t:8.4f} s"
+                f"  (compile {compile_s:5.2f} s)")
+    return rows
+
+
+def bench_memory(model, params, data_small, data_big, iters, chunk, log):
+    """Compiled-memory analysis: temp bytes of hf_step vs curvature batch.
+
+    ``batch`` (gradient + line search) is held at 1× throughout; only
+    ``hvp_batch`` grows — isolating the curvature-side residual memory the
+    chunked mode is built to flatten.
+    """
+    def temp_bytes(hvp_batch, mode, chunk_size):
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=iters,
+                       curvature_mode=mode, curvature_chunk_size=chunk_size)
+        state = hf_init(params, cfg)
+        comp = jax.jit(lambda p, s, b, hb, cfg=cfg: hf_step(
+            model.loss_fn, p, s, b, hb, cfg)).lower(
+            params, state, data_small, hvp_batch).compile()
+        ma = comp.memory_analysis()
+        return None if ma is None else int(ma.temp_size_in_bytes)
+
+    B = next(iter(jax.tree_util.tree_leaves(data_small))).shape[0]
+    B10 = next(iter(jax.tree_util.tree_leaves(data_big))).shape[0]
+    rows = [
+        {"label": "1x_unchunked", "hvp_batch": B, "mode": "linearize",
+         "chunk": 0, "temp_bytes": temp_bytes(data_small, "linearize", 0)},
+        {"label": "10x_unchunked", "hvp_batch": B10, "mode": "linearize",
+         "chunk": 0, "temp_bytes": temp_bytes(data_big, "linearize", 0)},
+        {"label": "10x_chunked", "hvp_batch": B10, "mode": "chunked",
+         "chunk": chunk, "temp_bytes": temp_bytes(data_big, "chunked", chunk)},
+    ]
+    out = {"rows": rows, "flat_memory_ok": None}
+    if all(r["temp_bytes"] is not None for r in rows):
+        base, big, flat = (r["temp_bytes"] for r in rows)
+        # chunked 10× batch must cost ~the 1× footprint, not the 10× one
+        out["flat_memory_ok"] = bool(flat <= 1.3 * base)
+        out["unchunked_growth"] = round(big / base, 2)
+        out["chunked_growth"] = round(flat / base, 2)
+    for r in rows:
+        log(f"  memory {r['label']:14s} hvp_batch={r['hvp_batch']:5d} "
+            f"temp={r['temp_bytes'] if r['temp_bytes'] is not None else '?'} B")
+    if out["flat_memory_ok"] is not None:
+        log(f"  memory growth 10x unchunked={out['unchunked_growth']}x "
+            f"chunked={out['chunked_growth']}x flat_ok={out['flat_memory_ok']}")
+    return out
+
+
+def run_bench(tiny: bool = False, out_path: str = "BENCH_curvature.json",
+              log=print):
+    if tiny:
+        dims, B, iters, reps = (64, 32, 10), 64, 4, 1
+    else:
+        dims, B, iters, reps = (784, 400, 150, 10), 512, 16, 3
+    chunk = B // 4
+    model = build_mlp(dims)
+    params = model.init(jax.random.PRNGKey(1))
+    data = classification_dataset(jax.random.PRNGKey(0), B, dims[0], dims[-1])
+    data_big = classification_dataset(jax.random.PRNGKey(2), 10 * B, dims[0], dims[-1])
+
+    log(f"curvature bench: mlp{dims} batch={B} iters={iters} chunk={chunk}"
+        f"{' [tiny]' if tiny else ''}")
+    result = {
+        "config": {"mlp": list(dims), "batch": B, "hvp_iters": iters,
+                   "chunk": chunk, "reps": reps, "tiny": tiny,
+                   "backend": jax.default_backend()},
+        "per_product": bench_per_product(model, params, data, chunk, reps, log),
+        "solve": bench_solve(model, params, data, iters, chunk, reps, log),
+        # flat backend = Pallas interpret mode off-TPU: on the full-size
+        # config that times the Python interpreter, so the backend matrix
+        # runs flat rows at tiny scale only (kernels_bench.py, same policy).
+        "hf_step": bench_hf_step(
+            model, params, data, iters, chunk, reps,
+            backends=("tree", "flat") if tiny else ("tree",), log=log),
+        "memory": bench_memory(model, params, data, data_big, iters, chunk, log),
+    }
+    if not tiny:
+        tiny_model = build_mlp((64, 32, 10))
+        tiny_params = tiny_model.init(jax.random.PRNGKey(1))
+        tiny_data = classification_dataset(jax.random.PRNGKey(0), 64, 64, 10)
+        result["hf_step_flat_small"] = bench_hf_step(
+            tiny_model, tiny_params, tiny_data, iters, 16, reps,
+            backends=("flat",), log=log)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    log(f"wrote {out_path}")
+    return result
+
+
+def run(log=print):
+    """benchmarks.run integration: CSV rows from a tiny pass (no JSON)."""
+    res = run_bench(tiny=True, out_path=os.devnull, log=lambda *a: None)
+    rows = []
+    for r in res["per_product"]:
+        rows.append((f"curvature/{r['op']}_{r['mode']}", r["percall_us"],
+                     f"jit_us={r['jit_us']:.0f} build_s={r['build_s']}"))
+    s = res["solve"]
+    rows.append((f"curvature/{s['solver']}_it{s['iters']}_naive",
+                 s["naive_s"] * 1e6,
+                 f"speedup_linearize={s['speedup_linearize']}"))
+    for r in res["hf_step"]:
+        rows.append((f"curvature/hf_step_{r['backend']}_{r['mode']}",
+                     r["wall_s"] * 1e6, f"compile_s={r['compile_s']}"))
+    m = res["memory"]
+    if m["flat_memory_ok"] is not None:
+        rows.append(("curvature/memory_10x_chunked_growth",
+                     0.0, f"growth={m['chunked_growth']}x flat_ok={m['flat_memory_ok']}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: smallest shapes, 1 rep, same code paths")
+    ap.add_argument("--out", default="BENCH_curvature.json")
+    args = ap.parse_args()
+    run_bench(tiny=args.tiny, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -167,6 +167,12 @@ class HFOptConfig:
     hvp_batch_frac: float = 0.25               # curvature mini-batch fraction
     precondition: bool = False                 # Jacobi preconditioning (all Krylov solvers)
     krylov_backend: str = "tree"               # "tree" (sharded pytrees) | "flat" (fused Pallas)
+    # Curvature engine (core.curvature): "naive" | "linearize" | "chunked".
+    # "linearize" caches the primal linearization once per outer step;
+    # "chunked" adds lax.scan microbatch accumulation of G·v at flat memory
+    # (curvature_chunk_size examples per chunk) for Fig. 4-scale hvp batches.
+    curvature_mode: str = "linearize"
+    curvature_chunk_size: int = 0              # chunked mode: examples per microbatch
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,5 +1,12 @@
 """Core: the paper's distributed Hessian-free optimizer."""
 from .hf import HFConfig, HFState, hf_init, hf_step, SOLVERS
+from .curvature import (
+    MODES as CURVATURE_MODES,
+    chunked_scalar_fn,
+    make_gnvp_op,
+    make_hvp_op,
+    split_chunks,
+)
 from .hvp import fd_hvp, make_damped, make_gnvp, make_hvp
 from .krylov import BACKENDS, FlatVectorBackend, TreeVectorBackend, get_backend
 from .line_search import armijo
@@ -9,6 +16,8 @@ from . import tree_math
 
 __all__ = [
     "HFConfig", "HFState", "hf_init", "hf_step", "SOLVERS",
+    "CURVATURE_MODES", "chunked_scalar_fn", "make_gnvp_op", "make_hvp_op",
+    "split_chunks",
     "fd_hvp", "make_damped", "make_gnvp", "make_hvp",
     "BACKENDS", "FlatVectorBackend", "TreeVectorBackend", "get_backend",
     "armijo", "lm_update",

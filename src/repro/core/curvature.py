@@ -1,0 +1,314 @@
+"""Curvature-operator engine: linearize-once products + chunked accumulation.
+
+The paper's per-Krylov-iteration cost model (Alg. 2 line 5: one stochastic
+curvature product + one all-reduce per iteration) only holds if the product
+is *cheap*. Two levers, both implemented here:
+
+**Linearize-once** (``mode="linearize"``, the default). The naive operator
+re-runs the primal forward+backward pass on every application —
+``jax.jvp(grad_fn, (params,), (v,))`` computes ``grad_fn(params)`` *and* its
+tangent each call, ~4 network passes per HVP. ``jax.linearize`` performs the
+primal pass once per outer HF step, caches its residuals, and returns the
+linear map alone: each of the ``max_cg_iters`` Krylov iterations then runs
+only the tangent (~2 passes — half the FLOPs; measured 1.5–2.4× per product,
+see EXPERIMENTS.md §Perf pair D). For the Gauss-Newton product the same
+once-only pairing is ``jax.linearize`` on the network (J·v), its
+``jax.linear_transpose`` (Jᵀ·u — reuses the *same* residuals, no second
+forward pass), and a linearize of the output-space gradient (∇²_z ℓ · u).
+
+  Note on whole-step jit: inside a single ``lax.while_loop`` body XLA's
+  loop-invariant code motion can hoist the naive operator's primal out of
+  the loop, recovering much of the win implicitly. The linearized form makes
+  the schedule *explicit* — it survives per-call dispatch (the paper's
+  MPI-root schedule, jit at the operator boundary), operators under
+  ``lax.cond`` (the hybrid solver — branches are never hoisted), eager/debug
+  use (no per-call retracing), and it shrinks the traced graph (faster
+  compiles). Benchmarks: ``benchmarks/curvature_bench.py``.
+
+**Chunked accumulation** (``mode="chunked"``, ``chunk_size`` knob). The
+paper's Fig. 4 argues for order-of-magnitude *larger* curvature batches; the
+memory wall is the linearization residuals, which scale with the curvature
+batch. The chunked path rewrites the mini-batch loss as an exact
+``lax.scan`` over microbatches of ``chunk_size`` examples (weighted so a
+non-divisor remainder chunk is handled exactly), linearizes *that*, and —
+with ``jax.checkpoint`` on the chunk body (``remat=True``) — keeps only
+per-chunk boundaries resident: peak memory is flat in the curvature batch
+size (the tangent re-materializes one chunk at a time inside the scan).
+G·v is accumulated across chunks *inside* the operator, so ``grad_reduce``
+is applied exactly once per accumulated product — Alg. 2's
+one-reduce-per-Krylov-iteration schedule is preserved regardless of how
+many chunks a worker sweeps.
+
+Chunking assumes the loss/outputs decompose independently over the leading
+batch axis with mean semantics (true for every model in this repo; the MoE
+aux loss is per-chunk-mean approximated, same as any microbatching scheme).
+
+Sharding story:
+  * **pjit/GSPMD** (implicit collectives, ``grad_reduce=None``): batch
+    leaves sharded over ("pod","data"); the scan slices the *leading* axis,
+    so each microbatch keeps the batch sharding and the partitioner inserts
+    one all-reduce per accumulated product (the per-chunk partial products
+    reduce locally — sharding propagation sees the scan carry as the only
+    cross-chunk dependency).
+  * **shard_map** (explicit collectives, ``grad_reduce=lax.pmean``): every
+    worker scans its *local* batch shard; chunk products accumulate locally
+    and the single ``grad_reduce`` at the end is the one collective —
+    identical schedule to the unchunked path, so ``core.distributed`` works
+    unchanged for every ``curvature_mode``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+LossFn = Callable[[Any, Any], jax.Array]      # (params, batch) -> scalar mean
+OutFn = Callable[[Any, Any], Any]             # (params, batch) -> network output z
+OutLossFn = Callable[[Any, Any], jax.Array]   # (z, batch) -> scalar mean
+Op = Callable[[Any], Any]
+
+MODES = ("naive", "linearize", "chunked")
+
+
+def _cast_like(v, params):
+    """Krylov vectors live in f32 (recurrence stability) while params may be
+    bf16 — cast the tangent at the operator boundary."""
+    return jax.tree_util.tree_map(lambda t, p: t.astype(p.dtype), v, params)
+
+
+def _maybe_reduce(out, grad_reduce):
+    return out if grad_reduce is None else grad_reduce(out)
+
+
+def _batch_size(batch) -> int:
+    sizes = {x.shape[0] for x in jax.tree_util.tree_leaves(batch)}
+    if len(sizes) != 1:
+        raise ValueError(f"batch leaves disagree on leading dim: {sorted(sizes)}")
+    return sizes.pop()
+
+
+def split_chunks(batch, chunk_size: int):
+    """Split a batch along the leading axis into (main, rem, n_chunks, n_rem).
+
+    ``main`` stacks the ⌊B/chunk⌋ full microbatches on a new leading axis
+    (scan-ready); ``rem`` is the non-divisor remainder slice (None if B
+    divides evenly). Static shapes throughout — two traces at most.
+    """
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    B = _batch_size(batch)
+    n_chunks, n_rem = divmod(B, chunk_size)
+    main = None
+    if n_chunks:
+        main = jax.tree_util.tree_map(
+            lambda x: x[: n_chunks * chunk_size].reshape(
+                (n_chunks, chunk_size) + x.shape[1:]
+            ),
+            batch,
+        )
+    rem = None
+    if n_rem:
+        rem = jax.tree_util.tree_map(lambda x: x[B - n_rem:], batch)
+    return main, rem, n_chunks, n_rem
+
+
+def chunked_scalar_fn(fn: LossFn, batch, chunk_size: int, remat: bool = True
+                      ) -> Callable[[Any], jax.Array]:
+    """Rewrite a mean-over-batch scalar ``fn(params, batch)`` as an exact
+    scan over microbatches: params ↦ (1/B) Σ_c n_c · fn(params, chunk_c).
+
+    With ``remat`` the chunk body is ``jax.checkpoint``-ed, so a linearize
+    (or grad) of the returned closure keeps only chunk boundaries resident
+    and re-materializes one chunk at a time — peak memory flat in B.
+    """
+    B = _batch_size(batch)
+    if chunk_size <= 0 or chunk_size >= B:
+        return lambda p: fn(p, batch)
+    main, rem, n_chunks, n_rem = split_chunks(batch, chunk_size)
+    body = jax.checkpoint(fn) if remat else fn
+
+    def chunked(p):
+        def scan_body(acc, chunk):
+            return acc + body(p, chunk).astype(jnp.float32), None
+
+        total, _ = jax.lax.scan(scan_body, jnp.zeros((), jnp.float32), main)
+        total = total * chunk_size
+        if rem is not None:
+            total = total + n_rem * body(p, rem).astype(jnp.float32)
+        return total / B
+
+    return chunked
+
+
+def _check_mode(mode: str):
+    if mode not in MODES:
+        raise ValueError(f"curvature mode must be one of {MODES}, got {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Hessian-vector product  v ↦ ∇²f(θ) v
+# ---------------------------------------------------------------------------
+
+
+def make_hvp_op(
+    loss_fn: LossFn,
+    params,
+    batch,
+    *,
+    mode: str = "linearize",
+    chunk_size: int = 0,
+    remat: bool = True,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
+) -> Op:
+    """Exact stochastic Hessian operator (Pearlmutter; forward-over-reverse).
+
+    ``mode="naive"``     — per-call ``jvp`` of the gradient (primal re-run
+                           every application; the pre-engine behavior).
+    ``mode="linearize"`` — primal forward+backward once, cached linear map
+                           per application.
+    ``mode="chunked"``   — linearize-once over the scan-over-microbatches
+                           loss; flat memory in the curvature batch size.
+    """
+    _check_mode(mode)
+    if mode == "naive":
+        def grad_fn(p):
+            return jax.grad(loss_fn)(p, batch)
+
+        def hvp(v):
+            vc = _cast_like(v, params)
+            return _maybe_reduce(jax.jvp(grad_fn, (params,), (vc,))[1], grad_reduce)
+
+        return hvp
+
+    if mode == "chunked":
+        scalar = chunked_scalar_fn(loss_fn, batch, chunk_size, remat=remat)
+    else:
+        scalar = lambda p: loss_fn(p, batch)
+    _, lin = jax.linearize(jax.grad(scalar), params)
+
+    def hvp(v):
+        return _maybe_reduce(lin(_cast_like(v, params)), grad_reduce)
+
+    return hvp
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Newton-vector product  v ↦ Jᵀ (∇²_z ℓ) J v
+# ---------------------------------------------------------------------------
+
+
+def _gnvp_once(model_out_fn: OutFn, out_loss_fn: OutLossFn, params, batch) -> Op:
+    """Linearize-once GN product on one batch: one primal forward pass total.
+
+    ``jax.linearize`` on the network gives J·v *and* the residuals that
+    ``jax.linear_transpose`` reuses for Jᵀ·u (no second forward, unlike
+    ``jax.vjp``); the output-space Hessian ∇²_z ℓ is a linearize of the
+    output-space gradient at the cached z (cheap — z-sized, not θ-sized).
+    """
+    z, jvp_lin = jax.linearize(lambda p: model_out_fn(p, batch), params)
+    vjp_lin = jax.linear_transpose(jvp_lin, params)
+    _, hout_lin = jax.linearize(
+        lambda zz: jax.grad(out_loss_fn)(zz, batch), z
+    )
+
+    def gnvp(v):
+        jv = jvp_lin(v)                       # J v          (tangent forward)
+        hjv = hout_lin(jv)                    # ∇²_z ℓ · Jv  (output-space)
+        hjv = jax.tree_util.tree_map(lambda h, zz: h.astype(zz.dtype), hjv, z)
+        return vjp_lin(hjv)[0]                # Jᵀ · (…)     (tangent reverse)
+
+    return gnvp
+
+
+def _gnvp_direct(model_out_fn: OutFn, out_loss_fn: OutLossFn, params, vc, batch):
+    """One GN product on one batch with the primal recomputed in-call (the
+    naive per-call body and the chunked scan body — the same math, defined
+    once)."""
+    f = lambda p: model_out_fn(p, batch)
+    z, jv = jax.jvp(f, (params,), (vc,))
+    g_out = lambda zz: jax.grad(out_loss_fn)(zz, batch)
+    hjv = jax.jvp(g_out, (z,), (jv,))[1]
+    _, vjp_fn = jax.vjp(f, params)
+    return vjp_fn(hjv)[0]
+
+
+def make_gnvp_op(
+    model_out_fn: OutFn,
+    out_loss_fn: OutLossFn,
+    params,
+    batch,
+    *,
+    mode: str = "linearize",
+    chunk_size: int = 0,
+    remat: bool = True,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
+) -> Op:
+    """Gauss-Newton operator (PSD for convex ℓ — Martens' HF and the hybrid
+    fallback). Same mode semantics as ``make_hvp_op``; the chunked path
+    accumulates per-microbatch GN products (J is block-diagonal over
+    examples, so the per-chunk products sum exactly).
+
+    ``remat`` is accepted for signature parity but only affects the HVP
+    path: the chunked GN product recomputes each chunk's primal in-call
+    already (the scan frees one chunk's intermediates before the next), so
+    its memory is flat with or without checkpointing.
+    """
+    _check_mode(mode)
+    if mode == "naive":
+        def gnvp(v):
+            vc = _cast_like(v, params)
+            return _maybe_reduce(
+                _gnvp_direct(model_out_fn, out_loss_fn, params, vc, batch),
+                grad_reduce,
+            )
+
+        return gnvp
+
+    B = _batch_size(batch)
+    if mode == "linearize" or chunk_size <= 0 or chunk_size >= B:
+        inner = _gnvp_once(model_out_fn, out_loss_fn, params, batch)
+
+        def gnvp(v):
+            return _maybe_reduce(inner(_cast_like(v, params)), grad_reduce)
+
+        return gnvp
+
+    # chunked: scan over microbatches, accumulate n_c-weighted chunk products.
+    main, rem, n_chunks, n_rem = split_chunks(batch, chunk_size)
+
+    def gnvp(v):
+        vc = _cast_like(v, params)
+        acc0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def scan_body(acc, chunk):
+            gv = _gnvp_direct(model_out_fn, out_loss_fn, params, vc, chunk)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + chunk_size * g.astype(jnp.float32), acc, gv
+            )
+            return acc, None
+
+        acc, _ = jax.lax.scan(scan_body, acc0, main)
+        if rem is not None:
+            gv = _gnvp_direct(model_out_fn, out_loss_fn, params, vc, rem)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + n_rem * g.astype(jnp.float32), acc, gv
+            )
+        out = jax.tree_util.tree_map(
+            lambda a, p: (a / B).astype(p.dtype), acc, params
+        )
+        return _maybe_reduce(out, grad_reduce)
+
+    return gnvp
+
+
+def make_damped(op: Op, lam: jax.Array) -> Op:
+    """B(v) = G(v) + λ v  (Algorithm 1 line 4)."""
+
+    def damped(v):
+        gv = op(v)
+        return jax.tree_util.tree_map(lambda g, x: g + lam * x, gv, v)
+
+    return damped

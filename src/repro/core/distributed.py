@@ -25,6 +25,12 @@ fused Pallas kernels with zero extra communication (the collectives all live
 inside the loss/HVP operator applications). Under pjit with *sharded*
 params, keep the default "tree" backend — the flat ravel would break
 per-tensor shardings.
+
+Every ``HFConfig.curvature_mode`` composes with this schedule unchanged:
+the curvature engine receives ``grad_reduce=pmean`` and applies it once per
+accumulated product, so in "chunked" mode each worker scans its *local*
+batch shard chunk-by-chunk, accumulates locally, and still issues exactly
+one all-reduce per Krylov iteration (see core/curvature.py, sharding story).
 """
 from __future__ import annotations
 

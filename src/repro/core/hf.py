@@ -20,6 +20,13 @@ The inner Krylov solve runs on a swappable vector backend
 (``HFConfig.krylov_backend``): "tree" (pytree iterates, sharding-preserving)
 or "flat" (ravelled f32 iterates through the fused Pallas kernels — see
 core.krylov). Both yield the same KrylovResult; solver math is identical.
+
+The curvature operator itself comes from the curvature engine
+(``HFConfig.curvature_mode`` — core.curvature): the default "linearize" mode
+runs the primal forward/backward once per outer step and feeds the Krylov
+loop the cached linear map; "chunked" adds flat-memory accumulation over
+``curvature_chunk_size``-example microbatches for the paper's Fig. 4
+large-curvature-batch regime.
 """
 from __future__ import annotations
 
@@ -30,14 +37,16 @@ import jax
 import jax.numpy as jnp
 
 from . import damping as damping_mod
-from .hvp import make_damped, make_gnvp, make_hvp
+from .curvature import MODES as CURVATURE_MODES, make_damped, make_gnvp_op, make_hvp_op
 from .krylov import BACKENDS, get_backend
 from .line_search import armijo
 from .solvers import bicgstab, cg, hutchinson_diag, pcg, sign_correct
 from .tree_math import (
     tree_axpy,
+    tree_axpy_cast,
     tree_dot,
     tree_norm,
+    tree_pseudo_noise,
     tree_scale,
     tree_where,
     tree_zeros_like,
@@ -81,6 +90,18 @@ class HFConfig:
     # fused Pallas kernels (right for per-chip-replicated Krylov state, the
     # paper's pure data-parallel setting; interpret-mode off-TPU).
     krylov_backend: str = "tree"
+    # Curvature engine (core.curvature): "linearize" runs the primal
+    # forward/backward once per outer step and each Krylov iteration applies
+    # only the cached linear map; "chunked" additionally accumulates G·v over
+    # lax.scan microbatches of `curvature_chunk_size` examples (flat memory
+    # in the curvature batch — paper Fig. 4's 10× larger hvp batches);
+    # "naive" is the historical rebuild-per-call closure (baselines,
+    # EXPERIMENTS.md §Perf pair D).
+    curvature_mode: str = "linearize"
+    curvature_chunk_size: int = 0     # examples per microbatch (chunked mode;
+                                      # <=0 or >=batch ⇒ one whole-batch chunk)
+    curvature_remat: bool = True      # jax.checkpoint the chunk body (chunked
+                                      # HVP; chunked GN is flat-memory as-is)
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
@@ -88,6 +109,11 @@ class HFConfig:
         if self.krylov_backend not in BACKENDS:
             raise ValueError(
                 f"krylov_backend must be one of {BACKENDS}, got {self.krylov_backend!r}"
+            )
+        if self.curvature_mode not in CURVATURE_MODES:
+            raise ValueError(
+                f"curvature_mode must be one of {CURVATURE_MODES}, "
+                f"got {self.curvature_mode!r}"
             )
 
 
@@ -144,25 +170,33 @@ def hf_step(
     if needs_gn and (model_out_fn is None or out_loss_fn is None):
         raise ValueError(f"solver {config.solver} requires model_out_fn/out_loss_fn")
 
-    def _reduced(op):
-        if grad_reduce is None:
-            return op
-        return lambda v: grad_reduce(op(v))
-
     # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) ------------
     f0, g = jax.value_and_grad(loss_fn)(params, batch)
     if grad_reduce is not None:
         g = grad_reduce(g)
 
     # ---- Alg.2 line 5: stochastic curvature operator on the mini-batch -----
-    exact = _reduced(make_hvp(loss_fn, params, hvp_batch))
+    # Built once per outer step by the curvature engine: in "linearize"/
+    # "chunked" modes the primal forward+backward runs HERE (hoisted out of
+    # the Krylov loop — and, for the hybrid solver, out of the lax.cond
+    # branches, which XLA never hoists itself) and every operator
+    # application below executes only the cached linear map. grad_reduce is
+    # applied inside the engine, once per accumulated product.
+    curv_kw = dict(
+        mode=config.curvature_mode, chunk_size=config.curvature_chunk_size,
+        remat=config.curvature_remat, grad_reduce=grad_reduce,
+    )
+    # Only build the operators the solver will apply: in the linearized
+    # modes construction itself runs a primal pass (eagerly, outside jit).
+    if config.solver != "gn_cg":
+        exact = make_hvp_op(loss_fn, params, hvp_batch, **curv_kw)
     if needs_gn:
-        gn = _reduced(make_gnvp(model_out_fn, out_loss_fn, params, hvp_batch))
+        gn = make_gnvp_op(model_out_fn, out_loss_fn, params, hvp_batch, **curv_kw)
     if config.solver == "gn_cg":
         G = gn
     elif config.solver in ("hessian_cg", "bicgstab"):
         G = exact
-    else:  # hybrid: runtime switch (both branches traced, one executed)
+    else:  # hybrid: runtime switch between the two cached linear maps
         def G(v, _state_use_gn=state.use_gn):
             return jax.lax.cond(_state_use_gn, gn, exact, v)
 
@@ -174,8 +208,6 @@ def hf_step(
         # Sharding-preserving pseudo-noise (NOT jax.random — see
         # tree_math.tree_pseudo_noise): seeded by the gradient values, the
         # element position and the step counter.
-        from .tree_math import tree_pseudo_noise
-
         jit_tree = tree_pseudo_noise(g, state.step)
         scale = config.krylov_jitter * jnp.maximum(tree_norm(g), 1e-8) / jnp.maximum(
             tree_norm(jit_tree), 1e-20
@@ -188,6 +220,9 @@ def hf_step(
     krylov_be = get_backend(config.krylov_backend, template=b)
     m_inv = None
     if config.precondition:
+        # The probe reuses the prebuilt operator G — under the linearized
+        # modes each Hutchinson sample is one cached-linear-map application,
+        # not a fresh re-linearization (EXPERIMENTS.md §Perf pair D).
         diag = hutchinson_diag(G, b, state.step)
         m_inv = jax.tree_util.tree_map(
             lambda d: 1.0 / (jnp.abs(d) + lam) ** config.precond_alpha, diag
@@ -259,8 +294,6 @@ def hf_step(
         lam, f0, ls.f_new, pred_red,
         inc=config.damping_inc, dec=config.damping_dec,
     )
-    from .tree_math import tree_axpy_cast
-
     new_params = tree_axpy_cast(ls.alpha, delta, params)
     delta_taken = tree_scale(ls.alpha, delta)
 

@@ -1,11 +1,12 @@
-"""Curvature-vector operators: exact Hessian (R-op) and Gauss-Newton.
+"""Curvature-vector operators — thin compatibility wrappers over the
+curvature engine (``core.curvature``).
 
 The paper's Algorithm 2 line 5 constructs the stochastic operator
 ``G_k(v) = (1/N) sum_i  H_[i] v`` on a mini-batch, reduced across workers.
 Under pjit/GSPMD the reduction emerges from sharding the batch over the
-("pod","data") mesh axes — the jvp-of-grad below contains the same mean over
-examples the loss does, so XLA inserts exactly one all-reduce per HVP, which
-is the paper's one-MPI-reduce-per-CG-iteration schedule.
+("pod","data") mesh axes — the operators below contain the same mean over
+examples the loss does, so XLA inserts exactly one all-reduce per product,
+which is the paper's one-MPI-reduce-per-CG-iteration schedule.
 
 Operators:
   * ``make_hvp``  — exact stochastic Hessian (possibly indefinite; feeds
@@ -13,31 +14,40 @@ Operators:
   * ``make_gnvp`` — Gauss-Newton: J^T (∇²_z ℓ) J v (PSD for convex ℓ; feeds
     Martens' GN-CG and the Hybrid fallback).
 
-Both cost ≈ 2x a gradient, matching the paper's claim (Pearlmutter trick).
+Both default to the engine's ``"linearize"`` mode: the primal
+forward/backward pass runs once at operator construction and every
+application executes only the cached linear map (~2 network passes per
+product instead of ~4 — see core/curvature.py and EXPERIMENTS.md §Perf
+pair D). Pass ``mode="naive"`` for the historical rebuild-every-call
+closures, or ``mode="chunked"`` + ``chunk_size`` for flat-memory
+accumulation over microbatches (large curvature batches, paper Fig. 4).
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
-LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar
+from .curvature import LossFn, make_damped, make_gnvp_op, make_hvp_op
+
+__all__ = ["make_hvp", "make_gnvp", "make_damped", "fd_hvp"]
 
 
-def make_hvp(loss_fn: LossFn, params, batch) -> Callable[[Any], Any]:
-    """Exact Hessian-vector product operator v ↦ ∇²f(θ) v (forward-over-reverse)."""
-
-    def grad_fn(p):
-        return jax.grad(loss_fn)(p, batch)
-
-    def hvp(v):
-        # Krylov vectors are kept in f32 (recurrence stability) while params
-        # may be bf16 — cast the tangent at the operator boundary.
-        vc = jax.tree_util.tree_map(lambda t, p: t.astype(p.dtype), v, params)
-        return jax.jvp(grad_fn, (params,), (vc,))[1]
-
-    return hvp
+def make_hvp(
+    loss_fn: LossFn,
+    params,
+    batch,
+    *,
+    mode: str = "linearize",
+    chunk_size: int = 0,
+    remat: bool = True,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
+) -> Callable[[Any], Any]:
+    """Exact Hessian-vector product operator v ↦ ∇²f(θ) v."""
+    return make_hvp_op(
+        loss_fn, params, batch,
+        mode=mode, chunk_size=chunk_size, remat=remat, grad_reduce=grad_reduce,
+    )
 
 
 def make_gnvp(
@@ -45,6 +55,11 @@ def make_gnvp(
     out_loss_fn: Callable[[jax.Array, Any], jax.Array],
     params,
     batch,
+    *,
+    mode: str = "linearize",
+    chunk_size: int = 0,
+    remat: bool = True,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
 ) -> Callable[[Any], Any]:
     """Gauss-Newton-vector product v ↦ Jᵀ (∇²_z ℓ(z)) J v.
 
@@ -54,31 +69,10 @@ def make_gnvp(
     this is exactly what Martens' HF uses and what the paper argues loses the
     negative-curvature information.
     """
-
-    def f(p):
-        return model_out_fn(p, batch)
-
-    def gnvp(v):
-        v = jax.tree_util.tree_map(lambda t, p: t.astype(p.dtype), v, params)
-        z, jv = jax.jvp(f, (params,), (v,))  # J v  (forward)
-        # H_out @ jv  via jvp of the output-space gradient (z is fixed point).
-        g_out = lambda zz: jax.grad(out_loss_fn)(zz, batch)
-        hjv = jax.jvp(g_out, (z,), (jv,))[1]
-        # Jᵀ (H_out J v)  (reverse)
-        _, vjp_fn = jax.vjp(f, params)
-        return vjp_fn(hjv)[0]
-
-    return gnvp
-
-
-def make_damped(op: Callable[[Any], Any], lam: jax.Array) -> Callable[[Any], Any]:
-    """B(v) = G(v) + λ v  (Algorithm 1 line 4)."""
-
-    def damped(v):
-        gv = op(v)
-        return jax.tree_util.tree_map(lambda g, x: g + lam * x, gv, v)
-
-    return damped
+    return make_gnvp_op(
+        model_out_fn, out_loss_fn, params, batch,
+        mode=mode, chunk_size=chunk_size, remat=remat, grad_reduce=grad_reduce,
+    )
 
 
 def fd_hvp(loss_fn: LossFn, params, batch, v, eps: float = 1e-4):

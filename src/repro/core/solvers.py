@@ -57,7 +57,7 @@ from .krylov import (
     nc_probe,
     phi_value,
 )
-from .tree_math import tree_dot, tree_scale, tree_zeros_like
+from .tree_math import tree_dot, tree_pseudo_noise, tree_scale, tree_zeros_like
 
 Op = Callable[[Any], Any]
 
@@ -236,9 +236,13 @@ def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
 
 def hutchinson_diag(op: Op, like, step, *, samples: int = 1):
     """Hutchinson diagonal estimate diag(A) ≈ E[v ⊙ Av] with Rademacher v
-    (built from the sharding-preserving pseudo-noise — no RNG replication)."""
-    from .tree_math import tree_pseudo_noise
+    (built from the sharding-preserving pseudo-noise — no RNG replication).
 
+    ``op`` is applied as-is, once per sample: pass a *prebuilt* operator —
+    under the curvature engine's linearized modes each probe is then one
+    cached-linear-map application, so ``precondition=True`` shares the outer
+    step's single linearization instead of paying a fresh one (the operator
+    is exactly the ``G`` the Krylov solve will use)."""
     acc = tree_zeros_like(like)
     for s in range(samples):
         v = jax.tree_util.tree_map(

@@ -37,6 +37,8 @@ def train(
     max_cg_iters: int = 8,
     precondition: bool = False,
     krylov_backend: str = "tree",
+    curvature_mode: str = "linearize",
+    curvature_chunk_size: int = 0,
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
     log_fn=print,
@@ -47,6 +49,8 @@ def train(
         name=solver, lr=lr, hvp_batch_frac=hvp_batch_frac,
         max_cg_iters=max_cg_iters, precondition=precondition,
         krylov_backend=krylov_backend,
+        curvature_mode=curvature_mode,
+        curvature_chunk_size=curvature_chunk_size,
     )
     opt = make_optimizer(
         opt_cfg, model.loss_fn, model_out_fn=model.logits_fn,
@@ -102,6 +106,13 @@ def main():
     ap.add_argument("--krylov-backend", default="tree", choices=["tree", "flat"],
                     help="Krylov vector backend: sharding-preserving pytrees "
                          "or flat buffers through the fused Pallas kernels")
+    ap.add_argument("--curvature-mode", default="linearize",
+                    choices=["naive", "linearize", "chunked"],
+                    help="curvature engine: rebuild-per-call, linearize-once, "
+                         "or chunked microbatch accumulation (flat memory)")
+    ap.add_argument("--curvature-chunk-size", type=int, default=0,
+                    help="chunked mode: examples per microbatch "
+                         "(<=0 = whole curvature batch in one chunk)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--history-out", default=None)
@@ -112,6 +123,8 @@ def main():
         batch_size=args.batch_size, seq_len=args.seq_len, lr=args.lr,
         max_cg_iters=args.max_cg_iters, precondition=args.precondition,
         krylov_backend=args.krylov_backend,
+        curvature_mode=args.curvature_mode,
+        curvature_chunk_size=args.curvature_chunk_size,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     if args.history_out:

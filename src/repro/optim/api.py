@@ -63,6 +63,8 @@ def make_optimizer(
         cg_decay=opt.cg_decay,
         precondition=opt.precondition,
         krylov_backend=opt.krylov_backend,
+        curvature_mode=opt.curvature_mode,
+        curvature_chunk_size=opt.curvature_chunk_size,
     )
 
     def init(params):

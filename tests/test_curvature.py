@@ -1,0 +1,271 @@
+"""Curvature engine (core.curvature): linearize-once + chunked accumulation.
+
+The engine must be *invisible* numerically: every mode is the same operator
+G, only the execution schedule differs. Reference chain:
+
+    fd_hvp oracle  ≡  naive (rebuild-per-call)  ≡  linearize  ≡  chunked
+
+for the exact Hessian and (minus the fd oracle) the Gauss-Newton product,
+and one full ``hf_step`` must agree across curvature modes × both Krylov
+vector backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HFConfig, fd_hvp, hf_init, hf_step
+from repro.core.curvature import (
+    MODES,
+    chunked_scalar_fn,
+    make_gnvp_op,
+    make_hvp_op,
+    split_chunks,
+)
+from repro.core.solvers import hutchinson_diag
+from repro.core.tree_math import tree_random_like
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+B = 12
+CHUNK_SIZES = [1, B // 2, B, 5, B + 1]  # {1, B/2, B, non-divisor, >B}
+
+
+def _setup():
+    model = build_mlp((8, 16, 4))
+    batch = classification_dataset(jax.random.PRNGKey(0), B, 8, 4)
+    params = model.init(jax.random.PRNGKey(1))
+    v = tree_random_like(jax.random.PRNGKey(2), params)
+    return model, batch, params, v
+
+
+def _assert_trees_close(a, b, rtol=1e-5, atol=1e-6, err=""):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=rtol, atol=atol, err_msg=err
+        )
+
+
+class TestHVPModes:
+    def test_linearize_matches_naive_and_fd(self):
+        model, batch, params, v = _setup()
+        naive = make_hvp_op(model.loss_fn, params, batch, mode="naive")(v)
+        lin = make_hvp_op(model.loss_fn, params, batch, mode="linearize")(v)
+        _assert_trees_close(naive, lin)
+        fd = fd_hvp(model.loss_fn, params, batch, v)
+        _assert_trees_close(lin, fd, rtol=5e-2, atol=5e-3, err="vs fd oracle")
+
+    @pytest.mark.parametrize("chunk", CHUNK_SIZES)
+    def test_chunked_matches_unchunked(self, chunk):
+        model, batch, params, v = _setup()
+        ref = make_hvp_op(model.loss_fn, params, batch, mode="linearize")(v)
+        ch = make_hvp_op(
+            model.loss_fn, params, batch, mode="chunked", chunk_size=chunk
+        )(v)
+        _assert_trees_close(ref, ch, err=f"chunk={chunk}")
+
+    @pytest.mark.parametrize("remat", [True, False])
+    def test_remat_does_not_change_values(self, remat):
+        model, batch, params, v = _setup()
+        ref = make_hvp_op(model.loss_fn, params, batch, mode="naive")(v)
+        ch = make_hvp_op(
+            model.loss_fn, params, batch, mode="chunked", chunk_size=5,
+            remat=remat,
+        )(v)
+        _assert_trees_close(ref, ch)
+
+    def test_unknown_mode_raises(self):
+        model, batch, params, _ = _setup()
+        with pytest.raises(ValueError, match="curvature mode"):
+            make_hvp_op(model.loss_fn, params, batch, mode="cached")
+
+
+class TestGNVPModes:
+    def test_linearize_matches_naive(self):
+        model, batch, params, v = _setup()
+        kw = dict(model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn)
+        naive = make_gnvp_op(
+            kw["model_out_fn"], kw["out_loss_fn"], params, batch, mode="naive"
+        )(v)
+        lin = make_gnvp_op(
+            kw["model_out_fn"], kw["out_loss_fn"], params, batch, mode="linearize"
+        )(v)
+        _assert_trees_close(naive, lin)
+
+    @pytest.mark.parametrize("chunk", CHUNK_SIZES)
+    def test_chunked_matches_unchunked(self, chunk):
+        model, batch, params, v = _setup()
+        ref = make_gnvp_op(
+            model.logits_fn, model.out_loss_fn, params, batch, mode="naive"
+        )(v)
+        ch = make_gnvp_op(
+            model.logits_fn, model.out_loss_fn, params, batch,
+            mode="chunked", chunk_size=chunk,
+        )(v)
+        _assert_trees_close(ref, ch, err=f"chunk={chunk}")
+
+
+class TestChunkedLoss:
+    """The scan-over-microbatches loss is exact, not approximate."""
+
+    @pytest.mark.parametrize("chunk", CHUNK_SIZES)
+    def test_scalar_value_exact(self, chunk):
+        model, batch, params, _ = _setup()
+        full = float(model.loss_fn(params, batch))
+        chunked = float(chunked_scalar_fn(model.loss_fn, batch, chunk)(params))
+        np.testing.assert_allclose(chunked, full, rtol=1e-6)
+
+    def test_split_chunks_shapes(self):
+        _, batch, _, _ = _setup()
+        main, rem, n_chunks, n_rem = split_chunks(batch, 5)
+        assert n_chunks == 2 and n_rem == 2
+        assert main["x"].shape == (2, 5, 8)
+        assert rem["x"].shape == (2, 8)
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(main["x"]).reshape(10, 8),
+                            np.asarray(rem["x"])]),
+            np.asarray(batch["x"]),
+        )
+
+    def test_mismatched_leading_dims_raise(self):
+        bad = {"x": jnp.zeros((4, 2)), "y": jnp.zeros((5,), jnp.int32)}
+        with pytest.raises(ValueError, match="leading dim"):
+            split_chunks(bad, 2)
+
+
+class TestGradReduceOnce:
+    """Alg. 2's schedule: ONE reduce per accumulated product — grad_reduce
+    must be applied exactly once regardless of how many chunks are swept.
+    The probe reduce adds a constant: if it were applied per chunk the
+    result would be offset by n_chunks, not 1."""
+
+    def _probe(self, t):
+        return jax.tree_util.tree_map(lambda x: x + 1.0, t)
+
+    @pytest.mark.parametrize("mode,chunk", [
+        ("naive", 0), ("linearize", 0), ("chunked", 5), ("chunked", 1),
+    ])
+    def test_hvp_reduce_applied_once(self, mode, chunk):
+        model, batch, params, v = _setup()
+        plain = make_hvp_op(model.loss_fn, params, batch,
+                            mode=mode, chunk_size=chunk)(v)
+        reduced = make_hvp_op(model.loss_fn, params, batch, mode=mode,
+                              chunk_size=chunk, grad_reduce=self._probe)(v)
+        expect = jax.tree_util.tree_map(lambda x: x + 1.0, plain)
+        _assert_trees_close(reduced, expect, err=f"{mode}/chunk={chunk}")
+
+    @pytest.mark.parametrize("mode,chunk", [("linearize", 0), ("chunked", 5)])
+    def test_gnvp_reduce_applied_once(self, mode, chunk):
+        model, batch, params, v = _setup()
+        plain = make_gnvp_op(model.logits_fn, model.out_loss_fn, params, batch,
+                             mode=mode, chunk_size=chunk)(v)
+        reduced = make_gnvp_op(model.logits_fn, model.out_loss_fn, params,
+                               batch, mode=mode, chunk_size=chunk,
+                               grad_reduce=self._probe)(v)
+        expect = jax.tree_util.tree_map(lambda x: x + 1.0, plain)
+        _assert_trees_close(reduced, expect, err=f"{mode}/chunk={chunk}")
+
+
+class TestHFStepAcrossModes:
+    """One hf_step must be numerically identical (to fp noise) for every
+    curvature mode on both Krylov vector backends. init_damping=5.0 keeps
+    the Bi-CG-STAB recurrence in the well-conditioned regime where
+    reduction-order noise stays at fp level (same policy as
+    test_krylov_backends)."""
+
+    def _setup(self):
+        model = build_mlp((8, 16, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 64, 8, 4)
+        params = model.init(jax.random.PRNGKey(1))
+        return model, data, params
+
+    def _step(self, model, data, params, cfg):
+        state = hf_init(params, cfg)
+        step = jax.jit(lambda p, s, cfg=cfg: hf_step(
+            model.loss_fn, p, s, data, data, cfg,
+            model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+        p2, _, metrics = step(params, state)
+        return p2, metrics
+
+    @pytest.mark.parametrize("backend", ["tree", "flat"])
+    @pytest.mark.parametrize("mode", list(MODES))
+    def test_step_matches_reference(self, mode, backend):
+        model, data, params = self._setup()
+        ref_cfg = HFConfig(solver="bicgstab", max_cg_iters=8, init_damping=5.0,
+                           curvature_mode="naive", krylov_backend="tree")
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=8, init_damping=5.0,
+                       curvature_mode=mode, curvature_chunk_size=24,
+                       krylov_backend=backend)
+        p_ref, m_ref = self._step(model, data, params, ref_cfg)
+        p2, m2 = self._step(model, data, params, cfg)
+        _assert_trees_close(p_ref, p2, rtol=1e-5, atol=1e-5,
+                            err=f"{mode}/{backend}")
+        assert int(m_ref["cg_iters"]) == int(m2["cg_iters"])
+        for k in m_ref:
+            np.testing.assert_allclose(float(m_ref[k]), float(m2[k]),
+                                       rtol=1e-5, atol=1e-5, err_msg=k)
+
+    def test_hybrid_solver_chunked_trains(self):
+        """The hybrid lax.cond switch runs on the cached linear maps; a few
+        chunked-mode steps must still reduce the loss."""
+        model, data, params = self._setup()
+        cfg = HFConfig(solver="hybrid_cg", max_cg_iters=6,
+                       curvature_mode="chunked", curvature_chunk_size=16)
+        state = hf_init(params, cfg)
+        step = jax.jit(lambda p, s: hf_step(
+            model.loss_fn, p, s, data, data, cfg,
+            model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+        losses = []
+        for _ in range(6):
+            params, state, m = step(params, state)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.8 * losses[0]
+
+
+class TestHutchinsonReuse:
+    """`hutchinson_diag` applies the operator as-is: handing it the step's
+    prebuilt linearized operator gives the naive-mode estimate exactly (no
+    re-linearization, same numbers)."""
+
+    def test_probe_matches_across_modes(self):
+        model, batch, params, _ = _setup()
+        step = jnp.asarray(3)
+        like = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        diags = {
+            mode: hutchinson_diag(
+                make_hvp_op(model.loss_fn, params, batch,
+                            mode=mode, chunk_size=5),
+                like, step, samples=2)
+            for mode in MODES
+        }
+        _assert_trees_close(diags["naive"], diags["linearize"])
+        _assert_trees_close(diags["naive"], diags["chunked"])
+
+
+class TestConfigPlumbing:
+    def test_bad_mode_raises_in_hfconfig(self):
+        with pytest.raises(ValueError, match="curvature_mode"):
+            HFConfig(curvature_mode="lazy")
+
+    def test_optimizer_threads_curvature_config(self):
+        from repro.configs.base import HFOptConfig
+        from repro.optim import make_optimizer
+
+        model = build_mlp((8, 16, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 16, 8, 4)
+        params = model.init(jax.random.PRNGKey(1))
+        opt = make_optimizer(
+            HFOptConfig(name="bicgstab", max_cg_iters=4,
+                        curvature_mode="chunked", curvature_chunk_size=4),
+            model.loss_fn, model_out_fn=model.logits_fn,
+            out_loss_fn=model.out_loss_fn,
+        )
+        state = opt.init(params)
+        p2, _, metrics = jax.jit(opt.step)(params, state, data)
+        assert np.isfinite(float(metrics["loss"]))
+        assert any(
+            not np.allclose(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(p2))
+        )
