@@ -14,6 +14,20 @@ Distributed HF (this paper): per OUTER iteration —
   1 gradient reduce + K Krylov-iteration HVP reduces + E line-search loss
   reduces, each of model size (gradient/HVP) or scalar (loss);
   outer iterations per epoch ≈ 1 (full-batch gradient).
+
+s-step (communication-avoiding) HF (core/sstep.py): the K per-iteration
+Krylov synchronizations collapse into one Gram-matrix reduction per cycle of
+s iterations —
+  syncs/outer iteration:  1 + ceil(K/s) + E       (vs 1 + K + E standard)
+  floats/outer iteration: MORE than standard — each cycle grows BOTH the p-
+  and r-power chains (2d−1 products of model size per cycle, chain depth
+  d = s for CG / 2s for Bi-CG-STAB, vs s products for s standard CG
+  iterations: asymptotically ~2× the reduce traffic, though those reduces
+  are dependency-free within a cycle and pipeline — no scalar gate between
+  them), plus one (2d+1)²-float Gram per cycle (Bi-CG-STAB's is
+  (4s+1)·(4s+4) with the r0*/b/x probe columns). Trading bytes for blocking
+  syncs is the communication-avoiding deal; it pays when latency dominates
+  (the paper's small-batch / many-node regime).
 """
 from __future__ import annotations
 
@@ -49,6 +63,42 @@ def hf_floats_per_iteration(dims: Sequence[int], cg_iters: int, ls_evals: int) -
 
 def hf_syncs_per_iteration(cg_iters: int, ls_evals: int) -> int:
     return 1 + cg_iters + ls_evals
+
+
+def sstep_basis_len(s: int, solver: str = "cg") -> int:
+    """Monomial-basis length per s-step cycle: [p, Ap, …, Aᵈp, r, …, A^{d−1}r]
+    with chain depth d = s (CG) or 2s (Bi-CG-STAB: two products/iteration)."""
+    d = 2 * s if solver == "bicgstab" else s
+    return 2 * d + 1
+
+
+def hf_sstep_floats_per_iteration(
+    dims: Sequence[int], cg_iters: int, ls_evals: int, s: int,
+    solver: str = "cg",
+) -> float:
+    """Floats exchanged per outer iteration with the s-step solve: gradient
+    + the cycle product traffic + one small Gram per cycle + line-search
+    scalars. Each cycle advances BOTH monomial chains — 2d−1 model-sized
+    products per cycle (chain depth d = s for CG, 2s for Bi-CG-STAB) vs s
+    products for s standard CG iterations — so the model-sized traffic is
+    asymptotically ~2× standard (s=1 CG reduces exactly to the standard
+    count plus its 3×3 Gram). MORE bytes for s× fewer blocking syncs: the
+    communication-avoiding trade, priced against latency by
+    fig5_scaling.py's sstep series."""
+    m = model_size(dims)
+    cycles = math.ceil(cg_iters / max(s, 1))
+    d = 2 * s if solver == "bicgstab" else s
+    bl = sstep_basis_len(s, solver)            # == 2d + 1
+    gram_cols = bl + (3 if solver == "bicgstab" else 0)  # r0*/b/x probe cols
+    return (1 + cycles * (2 * d - 1)) * m + cycles * bl * gram_cols + ls_evals
+
+
+def hf_sstep_syncs_per_iteration(cg_iters: int, ls_evals: int, s: int) -> int:
+    """Blocking synchronizations per outer iteration: the K per-Krylov-
+    iteration scalar round-trips collapse to one Gram reduction per cycle
+    of s iterations (1 + ceil(K/s) + E vs 1 + K + E). Validated against the
+    executed counts (KrylovResult.syncs) by benchmarks/sstep_bench.py."""
+    return 1 + math.ceil(cg_iters / max(s, 1)) + ls_evals
 
 
 def sgd_syncs_per_epoch(n: int, b: int, N: int) -> float:

@@ -28,10 +28,11 @@ from repro.core import make_hvp
 from repro.data import classification_dataset
 from repro.models import build_mlp
 
-from .comm_model import model_size, speedup_model
+from .comm_model import hf_sstep_syncs_per_iteration, model_size, speedup_model
 
 NODE_FLOPS = 2.65e12 * 0.5   # paper's Xeon node at 50% efficiency
 K_CG, N_LS = 10, 2
+SSTEP_S = 4                  # s-step series: one Gram sync per 4 CG iterations
 
 
 def _time_it(fn, *args, reps=3):
@@ -64,7 +65,7 @@ def run(log=print):
         t_grad_n = 6.0 * msize * B / NODE_FLOPS
         t_hvp_n = 12.0 * msize * (B // 4) / NODE_FLOPS   # curvature batch B/4
         t_ls_n = 2.0 * msize * B / NODE_FLOPS
-        t_compute = t_grad_n + K_CG * t_hvp_n + N_LS * t_ls_n
+        t_compute = t_compute_std = t_grad_n + K_CG * t_hvp_n + N_LS * t_ls_n
         syncs = 1 + K_CG + N_LS
         for N in (1, 2, 4, 8, 16, 32):
             sp = speedup_model(
@@ -73,4 +74,25 @@ def run(log=print):
             )
             rows.append((f"fig5/B{B}_N{N}", t_compute * 1e6 / N,
                          f"speedup={sp:.2f} compute={t_compute*1e3:.1f}ms"))
+        # s-step series (core/sstep.py): the CG-iteration syncs — the paper's
+        # non-scaling component — collapse to one Gram per s iterations; the
+        # basis needs (2s−1)/s products per iteration instead of 1 (the
+        # p- and r-power chains), so per-node compute rises by that factor.
+        # This is the communication-avoiding trade: it pays exactly in the
+        # small-batch / many-node regime the paper identifies as the scaling
+        # bottleneck.
+        s = SSTEP_S
+        t_compute_ss = (
+            t_grad_n + K_CG * ((2 * s - 1) / s) * t_hvp_n + N_LS * t_ls_n
+        )
+        syncs_ss = hf_sstep_syncs_per_iteration(K_CG, N_LS, s)
+        for N in (1, 2, 4, 8, 16, 32):
+            sp = speedup_model(
+                N, compute_s_per_node_unit=t_compute_ss,
+                bytes_per_sync=msize_bytes, syncs=syncs_ss,
+            )
+            # speedup vs the STANDARD single-node time (apples-to-apples)
+            sp_vs_std = sp * t_compute_std / t_compute_ss
+            rows.append((f"fig5/sstep{s}_B{B}_N{N}", t_compute_ss * 1e6 / N,
+                         f"speedup={sp_vs_std:.2f} syncs={syncs_ss}v{syncs}"))
     return rows

@@ -1,0 +1,259 @@
+"""s-step (communication-avoiding) Krylov benchmarks: reduce counts,
+block-HVP amortization, and training parity.
+
+  PYTHONPATH=src python benchmarks/sstep_bench.py [--tiny] [--out PATH]
+
+Measures, on the paper's Fig. 4 MLP (784-400-150-10):
+
+  1. **block amortization** — one stacked (s, n) multi-tangent curvature
+     product (core/blocks.py: jax.vmap over the cached linear map, residuals
+     read once) vs s independent single-tangent products in the per-call
+     dispatch regime the Krylov solvers use, for both the Hessian and the
+     Gauss-Newton operator. The acceptance row: measurable per-product
+     speedup for s ≥ 4 (on CPU the two-sided GN product — J·v and Jᵀ·u
+     share one residual set — is where the amortization shows; the
+     single-sided HVP's vmap lands on CPU BLAS's slow batched-matmul path
+     at small s, see EXPERIMENTS.md §Perf pair E).
+  2. **reduce counts** — hf_step with the standard vs s-step solvers in
+     both families (Bi-CG-STAB at s=2, CG/Gauss-Newton at s ∈ {2, 4}); the
+     executed blocking-reduction count per outer iteration (1 gradient +
+     ``KrylovResult.syncs`` Krylov + E line-search, from the step metrics)
+     must satisfy the comm model's s-step bound
+     ``1 + ceil(K/s) + E`` (vs ``1 + K + E`` standard) —
+     benchmarks/comm_model.py. Bi-CG-STAB at s=4 would build depth-8
+     monomial chains — beyond f32, the guard falls back every step — so the
+     benchmarked grid is the configuration space where s-step is *useful*,
+     and fallback_frac documents the guard's firing rate in each row.
+  3. **training parity + wall clock** — short deterministic training runs,
+     standard vs s-step per family: the final training loss must match the
+     family's standard solver within tolerance (2% of the initial loss —
+     the s-step recurrence is the same math, re-associated), and per-step
+     wall clock is reported (on one CPU the blocking-sync latency the
+     s-step form removes does not exist, so wall parity is the expectation
+     here — the win is the sync count, priced by the Fig. 5 model).
+
+Results go to ``BENCH_sstep.json`` (schema: EXPERIMENTS.md §Perf pair E).
+``--tiny`` is the CI smoke mode: smallest shapes, 1 rep, same code paths,
+same JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HFConfig, hf_init, hf_step
+from repro.core.blocks import make_block_gnvp_op, make_block_hvp_op, stack_tangents
+from repro.core.curvature import make_gnvp_op, make_hvp_op
+from repro.core.tree_math import tree_pseudo_noise
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+try:
+    from .comm_model import hf_sstep_syncs_per_iteration, hf_syncs_per_iteration
+except ImportError:  # executed directly: python benchmarks/sstep_bench.py
+    from comm_model import hf_sstep_syncs_per_iteration, hf_syncs_per_iteration
+
+# Final-loss parity band, standard vs s-step trajectories, as a fraction of
+# the INITIAL loss: both runs land within this much of each other on the
+# problem's loss scale (near zero training loss a relative band is noise).
+LOSS_TOL_FRAC = 0.02
+
+
+def _time_it(fn, *args, reps=3):
+    """Median-of-reps after one warmup (load-spike-robust, same policy as
+    curvature_bench)."""
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.time() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def bench_block_products(model, params, batch, s_list, reps, log):
+    """(s, n) block product vs s single products, per-call dispatch, for
+    both curvature operators."""
+    ops = {
+        "hvp": (
+            jax.jit(make_hvp_op(model.loss_fn, params, batch,
+                                mode="linearize")),
+            jax.jit(make_block_hvp_op(model.loss_fn, params, batch,
+                                      mode="linearize")),
+        ),
+        "gnvp": (
+            jax.jit(make_gnvp_op(model.logits_fn, model.out_loss_fn, params,
+                                 batch, mode="linearize")),
+            jax.jit(make_block_gnvp_op(model.logits_fn, model.out_loss_fn,
+                                       params, batch, mode="linearize")),
+        ),
+    }
+    rows = []
+    for op_name, (single, blk) in ops.items():
+        for s in s_list:
+            tangents = [tree_pseudo_noise(params, i) for i in range(s)]
+            V = stack_tangents(tangents)
+
+            def singles(ts=tuple(tangents), single=single):
+                return [single(v) for v in ts]
+
+            t_single = _time_it(singles, reps=reps)
+            t_block = _time_it(blk, V, reps=reps)
+            rows.append({
+                "op": op_name,
+                "s": s,
+                "singles_us": t_single * 1e6,
+                "block_us": t_block * 1e6,
+                "per_product_us": t_block * 1e6 / s,
+                "speedup": round(t_single / t_block, 3),
+            })
+            log(f"  block-{op_name:4s} s={s}: {s}x single "
+                f"{t_single*1e6:9.0f} us   block {t_block*1e6:9.0f} us   "
+                f"speedup {t_single/t_block:.2f}x")
+    return rows
+
+
+def _train(model, params, data, cfg, steps):
+    state = hf_init(params, cfg)
+    step = jax.jit(lambda p, s, b, cfg=cfg: hf_step(
+        model.loss_fn, p, s, b, b, cfg,
+        model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+    p = params
+    walls, syncs, iters, ls_evals, fallbacks, losses = [], [], [], [], [], []
+    for i in range(steps):
+        t0 = time.time()
+        p, state, m = step(p, state, data)
+        jax.block_until_ready(p)
+        if i > 0:                      # step 0 pays compile
+            walls.append(time.time() - t0)
+        syncs.append(int(m["krylov_syncs"]))
+        iters.append(int(m["cg_iters"]))
+        ls_evals.append(int(m["ls_evals"]))
+        fallbacks.append(bool(m["sstep_fallback"]))
+        losses.append(float(m["loss_new"]))
+    return {
+        "final_loss": losses[-1],
+        "mean_wall_s": round(sum(walls) / max(len(walls), 1), 5),
+        "syncs_mean": sum(syncs) / len(syncs),
+        "iters_mean": sum(iters) / len(iters),
+        "ls_evals_mean": sum(ls_evals) / len(ls_evals),
+        "fallback_frac": sum(fallbacks) / len(fallbacks),
+    }
+
+
+def bench_solvers(model, params, data, K, families, steps, log):
+    """Reduce counts + training parity, standard vs s-step, per solver
+    family: {"bicgstab": (2,), "gn_cg": (2, 4)} — s-step Bi-CG-STAB needs
+    2s-deep chains so s=2 is its f32 depth budget; the CG recurrence (depth
+    s) carries s=4."""
+    loss0 = float(model.loss_fn(params, data))
+    rows = []
+    ok = True
+    loss_ok = True
+    for solver, s_list in families.items():
+        std = _train(model, params, data,
+                     HFConfig(solver=solver, max_cg_iters=K), steps)
+        E = std["ls_evals_mean"]
+        rows.append({
+            "solver": solver, "s": 1, **std,
+            "reduces_per_outer": 1 + std["syncs_mean"] + E,
+            "bound": hf_syncs_per_iteration(K, math.ceil(E)),
+        })
+        log(f"  standard {solver}: loss {std['final_loss']:.4f}  "
+            f"wall {std['mean_wall_s']*1e3:.1f} ms  "
+            f"reduces/outer {rows[-1]['reduces_per_outer']:.1f}")
+        for s in s_list:
+            cfg = HFConfig(solver=solver, max_cg_iters=K, sstep_s=s)
+            r = _train(model, params, data, cfg, steps)
+            E_s = r["ls_evals_mean"]
+            reduces = 1 + r["syncs_mean"] + E_s
+            bound = hf_sstep_syncs_per_iteration(K, math.ceil(E_s), s)
+            row_ok = reduces <= bound + 1e-9
+            row_loss_ok = (
+                abs(r["final_loss"] - std["final_loss"])
+                <= LOSS_TOL_FRAC * loss0
+            )
+            rows.append({
+                "solver": f"sstep_{solver}", "s": s, **r,
+                "reduces_per_outer": reduces, "bound": bound,
+                "ok": row_ok, "loss_ok": row_loss_ok,
+            })
+            ok = ok and row_ok
+            loss_ok = loss_ok and row_loss_ok
+            log(f"  sstep_{solver} s={s}: loss {r['final_loss']:.4f}  "
+                f"wall {r['mean_wall_s']*1e3:.1f} ms  "
+                f"reduces/outer {reduces:.1f} <= bound {bound} : {row_ok}  "
+                f"fallback {r['fallback_frac']:.0%}")
+    return {"K": K, "steps": steps, "initial_loss": loss0, "rows": rows,
+            "ok": ok, "loss_ok": loss_ok}
+
+
+def run_bench(tiny: bool = False, out_path: str = "BENCH_sstep.json",
+              log=print):
+    if tiny:
+        dims, B, K, reps, steps = (64, 32, 10), 64, 4, 1, 4
+        families, block_s = {"bicgstab": (2,)}, (1, 2, 4)
+    else:
+        dims, B, K, reps, steps = (784, 400, 150, 10), 512, 16, 3, 10
+        families, block_s = {"bicgstab": (2,), "gn_cg": (2, 4)}, (1, 2, 4, 8)
+    model = build_mlp(dims)
+    params = model.init(jax.random.PRNGKey(1))
+    data = classification_dataset(jax.random.PRNGKey(0), B, dims[0], dims[-1])
+
+    log(f"sstep bench: mlp{dims} batch={B} K={K}{' [tiny]' if tiny else ''}")
+    result = {
+        "config": {"mlp": list(dims), "batch": B, "max_cg_iters": K,
+                   "reps": reps, "steps": steps, "tiny": tiny,
+                   "backend": jax.default_backend()},
+        "block_products": bench_block_products(
+            model, params, data, block_s, reps, log),
+        "solvers": bench_solvers(model, params, data, K, families, steps, log),
+    }
+    # The amortization acceptance: s ≥ 4 block products beat s singles. On
+    # CPU the GN product is where the residual-read amortization shows
+    # (two-sided residual reuse); the HVP rows are reported alongside —
+    # see EXPERIMENTS.md §Perf pair E for the CPU-vs-TPU discussion.
+    amort = [r for r in result["block_products"]
+             if r["s"] >= 4 and r["op"] == "gnvp"]
+    result["block_amortization_ok"] = (
+        bool(amort) and all(r["speedup"] > 1.0 for r in amort)
+        if not tiny else None   # tiny shapes are dispatch-noise-dominated
+    )
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    log(f"wrote {out_path}")
+    return result
+
+
+def run(log=print):
+    """benchmarks.run integration: CSV rows from a tiny pass (no JSON)."""
+    res = run_bench(tiny=True, out_path=os.devnull, log=lambda *a: None)
+    rows = []
+    for r in res["block_products"]:
+        rows.append((f"sstep/block_{r['op']}_s{r['s']}", r["per_product_us"],
+                     f"speedup={r['speedup']}"))
+    for r in res["solvers"]["rows"]:
+        rows.append((f"sstep/{r['solver']}_s{r['s']}",
+                     r["mean_wall_s"] * 1e6,
+                     f"reduces={r['reduces_per_outer']:.1f} "
+                     f"loss={r['final_loss']:.4f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: smallest shapes, 1 rep, same code paths")
+    ap.add_argument("--out", default="BENCH_sstep.json")
+    args = ap.parse_args()
+    run_bench(tiny=args.tiny, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -173,6 +173,13 @@ class HFOptConfig:
     # (curvature_chunk_size examples per chunk) for Fig. 4-scale hvp batches.
     curvature_mode: str = "linearize"
     curvature_chunk_size: int = 0              # chunked mode: examples per microbatch
+    # s-step (communication-avoiding) Krylov solve (core.sstep): sstep_s > 1
+    # batches the dot products of s Krylov iterations into one Gram-matrix
+    # reduction (1 + ceil(K/s) + E reduces per outer step vs 1 + K + E),
+    # with a conditioning guard that falls back to the standard solver.
+    # sstep_solver: "auto" (derive from `name`) | "cg" | "bicgstab".
+    sstep_s: int = 1
+    sstep_solver: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,10 +1,18 @@
 """Core: the paper's distributed Hessian-free optimizer."""
-from .hf import HFConfig, HFState, hf_init, hf_step, SOLVERS
+from .hf import HFConfig, HFState, hf_init, hf_step, SOLVERS, SSTEP_SOLVERS
+from .blocks import (
+    block_op_from_single,
+    make_block_gnvp_op,
+    make_block_hvp_op,
+    stack_tangents,
+    unstack_tangents,
+)
 from .curvature import (
     MODES as CURVATURE_MODES,
     chunked_scalar_fn,
     make_gnvp_op,
     make_hvp_op,
+    shared_primal_hvp,
     split_chunks,
 )
 from .hvp import fd_hvp, make_damped, make_gnvp, make_hvp
@@ -12,15 +20,19 @@ from .krylov import BACKENDS, FlatVectorBackend, TreeVectorBackend, get_backend
 from .line_search import armijo
 from .damping import lm_update
 from .solvers import KrylovResult, bicgstab, cg, pcg, sign_correct
+from .sstep import sstep_bicgstab, sstep_cg
 from . import tree_math
 
 __all__ = [
-    "HFConfig", "HFState", "hf_init", "hf_step", "SOLVERS",
+    "HFConfig", "HFState", "hf_init", "hf_step", "SOLVERS", "SSTEP_SOLVERS",
+    "block_op_from_single", "make_block_gnvp_op", "make_block_hvp_op",
+    "stack_tangents", "unstack_tangents",
     "CURVATURE_MODES", "chunked_scalar_fn", "make_gnvp_op", "make_hvp_op",
-    "split_chunks",
+    "shared_primal_hvp", "split_chunks",
     "fd_hvp", "make_damped", "make_gnvp", "make_hvp",
     "BACKENDS", "FlatVectorBackend", "TreeVectorBackend", "get_backend",
     "armijo", "lm_update",
     "KrylovResult", "bicgstab", "cg", "pcg", "sign_correct",
+    "sstep_bicgstab", "sstep_cg",
     "tree_math",
 ]

@@ -1,0 +1,139 @@
+"""Multi-tangent block curvature products: s tangents through one cached map.
+
+The linearize-once engine (core/curvature.py) already makes each curvature
+product a cheap cached-linear-map application — but a map application still
+streams the cached linearization residuals (activations, batch intermediates)
+from HBM once **per tangent**. The s-step/block-Krylov subsystem
+(core/sstep.py) wants products of *several* tangents against the same
+operator; applying them one at a time re-reads the residuals s times.
+
+This module lifts the engine's single-tangent operators to **block
+operators**: a stacked ``(s, ...)`` pytree of tangents (leading stack axis on
+every leaf — the tree Krylov backend's native block form, and what
+``FlatVectorBackend.lower_block`` produces from an ``(s, n)`` matrix) goes
+through ``jax.vmap`` **over the cached linear map**, so the residuals are
+read once and amortized over all s products. This works uniformly across the
+engine's modes:
+
+* ``linearize`` — vmap of the cached ``jax.linearize`` map: one residual
+  sweep feeds s tangent passes (the XLA program batches the tangent matmuls;
+  on TPU the weight/residual reads are shared across the s rows).
+* ``chunked``   — vmap *through the ``lax.scan`` over microbatches*: the scan
+  structure is preserved (still one chunk resident at a time, flat memory in
+  the curvature batch) and each chunk's residuals are read once for all s
+  tangents instead of once per tangent.
+* ``naive``     — vmap of the per-call jvp (baseline for the perf pair;
+  re-runs the primal, but still once per *block* rather than once per
+  tangent).
+
+**Reduce schedule:** ``grad_reduce`` is applied once per accumulated *block*
+(one collective carrying s stacked model-sized products) — Alg. 2's
+one-reduce-per-product schedule generalizes to one reduce per block product,
+which is exactly the communication shape the s-step solvers batch on
+(s products, one sync; see benchmarks/comm_model.py's s-step formulas).
+
+``block_op_from_single`` is the hot-path entry: ``hf_step`` builds its
+single-tangent operator once (one primal pass) and derives the block form
+from the SAME cached linearization — no second primal. The standalone
+``make_block_*_op`` builders mirror the curvature-engine constructors for
+direct use (benchmarks, tests).
+
+Measured: ``benchmarks/sstep_bench.py`` (block-HVP amortization rows,
+EXPERIMENTS.md §Perf pair E).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .curvature import _maybe_reduce, make_gnvp_op, make_hvp_op
+
+Op = Callable[[Any], Any]
+
+
+def stack_tangents(tangents: Sequence[Any]):
+    """Stack s tangent pytrees into one block (leading s axis per leaf)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tangents)
+
+
+def unstack_tangents(block):
+    """Inverse of ``stack_tangents``: block → list of s tangent pytrees."""
+    leaves = jax.tree_util.tree_leaves(block)
+    s = leaves[0].shape[0]
+    return [jax.tree_util.tree_map(lambda x, j=j: x[j], block) for j in range(s)]
+
+
+def block_op_from_single(op: Op) -> Op:
+    """Lift a single-tangent operator to a block operator over the SAME
+    cached linearization.
+
+    ``op`` is an operator as the curvature engine returns it (its closure
+    holds the cached linear map — and, in distributed use, the
+    ``grad_reduce`` collective). ``jax.vmap`` maps it over the leading stack
+    axis: one residual sweep for all s tangents, and a vmapped
+    ``grad_reduce`` lowers to ONE collective carrying the stacked block
+    (batching rule of ``lax.pmean``), preserving the one-reduce-per-block
+    schedule.
+    """
+    return jax.vmap(op)
+
+
+def make_block_hvp_op(
+    loss_fn,
+    params,
+    batch,
+    *,
+    mode: str = "linearize",
+    chunk_size: int = 0,
+    remat: bool = True,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
+) -> Op:
+    """Block Hessian operator: stacked tangents V ↦ stacked products H·V.
+
+    Same mode semantics as ``make_hvp_op``; the primal forward+backward runs
+    once at build (linearized modes) and every block application replays the
+    cached map under ``jax.vmap``. ``grad_reduce`` is applied once to the
+    stacked block output.
+    """
+    single = make_hvp_op(
+        loss_fn, params, batch, mode=mode, chunk_size=chunk_size,
+        remat=remat, grad_reduce=None,
+    )
+    blk = jax.vmap(single)
+
+    def block_hvp(tangents):
+        return _maybe_reduce(blk(tangents), grad_reduce)
+
+    return block_hvp
+
+
+def make_block_gnvp_op(
+    model_out_fn,
+    out_loss_fn,
+    params,
+    batch,
+    *,
+    mode: str = "linearize",
+    chunk_size: int = 0,
+    remat: bool = True,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
+) -> Op:
+    """Block Gauss-Newton operator: stacked V ↦ stacked Jᵀ(∇²_z ℓ)J·V.
+
+    The J·v / Jᵀ·u maps and the output-space Hessian are built once (one
+    primal forward, as in ``make_gnvp_op``) and vmapped over the stack: the
+    network residuals feed all s tangent forward/transpose passes in one
+    sweep.
+    """
+    single = make_gnvp_op(
+        model_out_fn, out_loss_fn, params, batch, mode=mode,
+        chunk_size=chunk_size, remat=remat, grad_reduce=None,
+    )
+    blk = jax.vmap(single)
+
+    def block_gnvp(tangents):
+        return _maybe_reduce(blk(tangents), grad_reduce)
+
+    return block_gnvp

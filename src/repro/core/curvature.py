@@ -193,6 +193,38 @@ def make_hvp_op(
     return hvp
 
 
+def shared_primal_hvp(
+    loss_fn: LossFn,
+    params,
+    batch,
+    *,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
+):
+    """One primal pass for the whole outer step: (f0, g, hvp_op).
+
+    When the curvature mini-batch IS the gradient batch (``hvp_batch ==
+    batch``, i.e. ``hvp_batch_frac >= 1``), ``hf_step`` historically paid two
+    primal forward+backward sweeps over the same batch: ``value_and_grad``
+    for (f0, g) and the engine's ``jax.linearize(jax.grad(...))`` for the
+    cached Hessian map. Linearizing ``value_and_grad`` itself yields all
+    three from a SINGLE forward+backward: the primal outputs are (f0, g) and
+    the cached linear map's gradient tangent is exactly the Hessian product
+    (∂g·v = H v). One fewer forward+backward per outer HF step.
+
+    ``grad_reduce`` is applied to g once and to every H·v product (same
+    schedule as ``make_hvp_op``); f0 needs no explicit reduce — under the
+    shard_map wrapper the loss is already pmean'd in the forward pass.
+    """
+    (f0, g), lin = jax.linearize(
+        lambda p: jax.value_and_grad(loss_fn)(p, batch), params
+    )
+
+    def hvp(v):
+        return _maybe_reduce(lin(_cast_like(v, params))[1], grad_reduce)
+
+    return f0, _maybe_reduce(g, grad_reduce), hvp
+
+
 # ---------------------------------------------------------------------------
 # Gauss-Newton-vector product  v ↦ Jᵀ (∇²_z ℓ) J v
 # ---------------------------------------------------------------------------

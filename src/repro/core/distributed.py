@@ -31,6 +31,34 @@ the curvature engine receives ``grad_reduce=pmean`` and applies it once per
 accumulated product, so in "chunked" mode each worker scans its *local*
 batch shard chunk-by-chunk, accumulates locally, and still issues exactly
 one all-reduce per Krylov iteration (see core/curvature.py, sharding story).
+
+**s-step × backend interaction** (``HFConfig.sstep_s > 1`` — core/sstep.py):
+the s-step solvers change WHAT synchronizes, and each backend realizes the
+saving differently:
+
+  * Under this shard_map schedule (replicated Krylov state), each basis
+    matvec is still one ``pmean`` — but the basis phase is a pure matvec
+    chain with NO scalar gates between products, so those collectives
+    pipeline back-to-back instead of alternating with blocking
+    dot-round-trips; the one *blocking* sync per s iterations is the Gram.
+    Width-2 block products additionally halve the collective count of the
+    chain phase: the vmapped ``grad_reduce`` pmean carries the stacked
+    pair in ONE collective (core/blocks.py).
+  * Under pjit/GSPMD with **sharded** params ("tree" backend — the right
+    choice there), every standard-iteration dot is a per-shard reduction +
+    a scalar all-reduce whose result gates the next step.
+    ``TreeVectorBackend.gram`` keeps the sharding-preserving form (per-leaf
+    ``dot_general`` contractions, no reshape — §Perf pair A) and turns s
+    iterations' worth of those blocking scalar syncs into one small
+    (basis × basis) matrix all-reduce per cycle.
+  * With per-chip replicated state ("flat" backend, this module's regime),
+    the Gram runs through the fused Pallas ``dots_block`` kernel: one pass
+    over the stacked basis per cycle with zero extra communication.
+
+The Gram-guard fallback re-enters the standard solver with the SAME
+backend and ``grad_reduce``, so a breakdown never changes the collective
+schedule's correctness — only its count (reported per step as
+``metrics["krylov_syncs"]`` / ``metrics["sstep_fallback"]``).
 """
 from __future__ import annotations
 

@@ -26,7 +26,19 @@ The curvature operator itself comes from the curvature engine
 runs the primal forward/backward once per outer step and feeds the Krylov
 loop the cached linear map; "chunked" adds flat-memory accumulation over
 ``curvature_chunk_size``-example microbatches for the paper's Fig. 4
-large-curvature-batch regime.
+large-curvature-batch regime. When the curvature mini-batch is the full
+batch, a single ``jax.linearize(jax.value_and_grad(loss))`` pass yields f0,
+g AND the cached Hessian map together (shared primal — one fewer
+forward+backward per outer step).
+
+``HFConfig.sstep_s > 1`` swaps the Krylov solve for its s-step
+(communication-avoiding) form (core.sstep): per cycle of s iterations the
+solver grows a monomial basis with width-2 *block* curvature products
+(core.blocks — same cached linearization, residuals read once per pair) and
+collapses all of the cycle's dot products into ONE Gram reduction —
+``1 + ceil(K/s) + E`` blocking reduces per outer step instead of
+``1 + K + E`` (benchmarks/comm_model.py), with a Gram-factorization guard
+that falls back to the standard solver when the basis conditioning degrades.
 """
 from __future__ import annotations
 
@@ -37,10 +49,18 @@ import jax
 import jax.numpy as jnp
 
 from . import damping as damping_mod
-from .curvature import MODES as CURVATURE_MODES, make_damped, make_gnvp_op, make_hvp_op
+from .blocks import block_op_from_single
+from .curvature import (
+    MODES as CURVATURE_MODES,
+    make_damped,
+    make_gnvp_op,
+    make_hvp_op,
+    shared_primal_hvp,
+)
 from .krylov import BACKENDS, get_backend
 from .line_search import armijo
 from .solvers import bicgstab, cg, hutchinson_diag, pcg, sign_correct
+from .sstep import sstep_bicgstab, sstep_cg
 from .tree_math import (
     tree_axpy,
     tree_axpy_cast,
@@ -53,6 +73,7 @@ from .tree_math import (
 )
 
 SOLVERS = ("gn_cg", "hessian_cg", "hybrid_cg", "bicgstab")
+SSTEP_SOLVERS = ("auto", "cg", "bicgstab")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +123,21 @@ class HFConfig:
                                       # <=0 or >=batch ⇒ one whole-batch chunk)
     curvature_remat: bool = True      # jax.checkpoint the chunk body (chunked
                                       # HVP; chunked GN is flat-memory as-is)
+    # s-step (communication-avoiding) Krylov solve (core.sstep): sstep_s > 1
+    # replaces the standard recurrence with the s-step form — per cycle of s
+    # iterations the solver grows a monomial basis (matvecs only, paired into
+    # width-2 block curvature products through the SAME cached linearization)
+    # and issues ONE Gram reduction in place of s per-iteration dot syncs
+    # (1 + ceil(K/s) + E reduces per outer step vs 1 + K + E — see
+    # benchmarks/comm_model.py). A Gram-factorization guard falls back to the
+    # standard solver when the basis conditioning degrades, so correctness
+    # never depends on the basis surviving. sstep_solver picks the s-step
+    # recurrence: "auto" derives it from `solver` (bicgstab ⇒ s-step
+    # Bi-CG-STAB, the CG family ⇒ s-step CG); "cg"/"bicgstab" force one.
+    # Incompatible with `precondition` (the s-step recurrences are
+    # unpreconditioned; rejected at config time).
+    sstep_s: int = 1
+    sstep_solver: str = "auto"
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
@@ -114,6 +150,17 @@ class HFConfig:
             raise ValueError(
                 f"curvature_mode must be one of {CURVATURE_MODES}, "
                 f"got {self.curvature_mode!r}"
+            )
+        if self.sstep_solver not in SSTEP_SOLVERS:
+            raise ValueError(
+                f"sstep_solver must be one of {SSTEP_SOLVERS}, "
+                f"got {self.sstep_solver!r}"
+            )
+        if self.sstep_s > 1 and self.precondition:
+            raise ValueError(
+                "sstep_s > 1 is incompatible with precondition=True: the "
+                "s-step recurrences are unpreconditioned (use the standard "
+                "solvers for Jacobi preconditioning)"
             )
 
 
@@ -170,26 +217,40 @@ def hf_step(
     if needs_gn and (model_out_fn is None or out_loss_fn is None):
         raise ValueError(f"solver {config.solver} requires model_out_fn/out_loss_fn")
 
-    # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) ------------
-    f0, g = jax.value_and_grad(loss_fn)(params, batch)
-    if grad_reduce is not None:
-        g = grad_reduce(g)
-
-    # ---- Alg.2 line 5: stochastic curvature operator on the mini-batch -----
-    # Built once per outer step by the curvature engine: in "linearize"/
-    # "chunked" modes the primal forward+backward runs HERE (hoisted out of
-    # the Krylov loop — and, for the hybrid solver, out of the lax.cond
-    # branches, which XLA never hoists itself) and every operator
-    # application below executes only the cached linear map. grad_reduce is
-    # applied inside the engine, once per accumulated product.
+    # ---- Alg.2 lines 3-5: gradient + stochastic curvature operator ---------
+    # Curvature operators are built once per outer step by the curvature
+    # engine: in "linearize"/"chunked" modes the primal forward+backward runs
+    # HERE (hoisted out of the Krylov loop — and, for the hybrid solver, out
+    # of the lax.cond branches, which XLA never hoists itself) and every
+    # operator application below executes only the cached linear map.
+    # grad_reduce is applied inside the engine, once per accumulated product.
     curv_kw = dict(
         mode=config.curvature_mode, chunk_size=config.curvature_chunk_size,
         remat=config.curvature_remat, grad_reduce=grad_reduce,
     )
-    # Only build the operators the solver will apply: in the linearized
-    # modes construction itself runs a primal pass (eagerly, outside jit).
-    if config.solver != "gn_cg":
-        exact = make_hvp_op(loss_fn, params, hvp_batch, **curv_kw)
+    # Shared primal: when the curvature mini-batch IS the gradient batch and
+    # the solver wants the exact Hessian, one jax.linearize(value_and_grad)
+    # yields f0, g AND the cached Hessian map from a single forward+backward
+    # (core.curvature.shared_primal_hvp) — one fewer primal pass per outer
+    # step than value_and_grad + a separate engine build.
+    shared = (
+        config.curvature_mode == "linearize"
+        and hvp_batch is batch
+        and config.solver != "gn_cg"
+    )
+    if shared:
+        f0, g, exact = shared_primal_hvp(
+            loss_fn, params, batch, grad_reduce=grad_reduce
+        )
+    else:
+        # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) --------
+        f0, g = jax.value_and_grad(loss_fn)(params, batch)
+        if grad_reduce is not None:
+            g = grad_reduce(g)
+        # Only build the operators the solver will apply: in the linearized
+        # modes construction itself runs a primal pass (eagerly, outside jit).
+        if config.solver != "gn_cg":
+            exact = make_hvp_op(loss_fn, params, hvp_batch, **curv_kw)
     if needs_gn:
         gn = make_gnvp_op(model_out_fn, out_loss_fn, params, hvp_batch, **curv_kw)
     if config.solver == "gn_cg":
@@ -227,7 +288,23 @@ def hf_step(
         m_inv = jax.tree_util.tree_map(
             lambda d: 1.0 / (jnp.abs(d) + lam) ** config.precond_alpha, diag
         )
-    if config.solver == "bicgstab":
+    if config.sstep_s > 1:
+        # s-step (communication-avoiding) solve: ONE Gram reduction per
+        # cycle of sstep_s iterations, basis power chains paired into
+        # width-2 block curvature products derived from the SAME cached
+        # linearization as A (core.blocks.block_op_from_single — jax.vmap
+        # over the operator, no second primal pass). Falls back to the
+        # standard solver on basis-conditioning breakdown.
+        kind = config.sstep_solver
+        if kind == "auto":
+            kind = "bicgstab" if config.solver == "bicgstab" else "cg"
+        sstep_fn = sstep_bicgstab if kind == "bicgstab" else sstep_cg
+        res = sstep_fn(
+            A, b, x0, lam=lam, s=config.sstep_s,
+            max_iters=config.max_cg_iters, tol=config.cg_tol,
+            backend=krylov_be, A_block=block_op_from_single(A),
+        )
+    elif config.solver == "bicgstab":
         res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
                        tol=config.cg_tol, M_inv=m_inv, backend=krylov_be)
     elif m_inv is not None:
@@ -317,6 +394,14 @@ def hf_step(
         "ls_evals": ls.n_evals,
         "cg_iters": res.iters,
         "cg_residual": res.residual,
+        # Blocking scalar-producing reductions the Krylov solve issued: one
+        # per iteration for the standard recurrences, one Gram reduction per
+        # s-iteration cycle for the s-step solvers (+ fallback iterations
+        # when the basis guard fired — sstep_fallback). The quantity the
+        # comm model's `1 + ceil(K/s) + E` counts (benchmarks/comm_model.py,
+        # measured by benchmarks/sstep_bench.py).
+        "krylov_syncs": res.syncs,
+        "sstep_fallback": jnp.logical_and(config.sstep_s > 1, res.breakdown),
         "nc_found": res.nc_found,
         "nc_used": take_nc,
         "nc_curv": res.nc_curv,

@@ -21,6 +21,24 @@ bandwidth-bound recurrences (axpy chains, dot products) **execute**:
   state is replicated per-chip (pure data parallelism, the paper's setting)
   and the inner loop is HBM-bandwidth-bound.
 
+**Block extension** (the ``BlockVectorBackend`` protocol): both backends also
+speak *blocks* — ordered stacks of s Krylov vectors. A block is the backend's
+native multi-vector representation (tree: pytree with a leading ``s`` axis on
+every leaf; flat: an ``(s, n)`` f32 matrix) and supports
+
+* ``block_stack`` / ``block_col``  — build a block from vectors / read one out,
+* ``lift_block`` / ``lower_block`` — convert to/from the stacked-pytree form
+  the block curvature products (core/blocks.py) consume,
+* ``wrap_block_op``                — adapt a stacked-pytree block operator to
+  backend blocks (the multi-tangent curvature product boundary),
+* ``gram``                         — the (s_u × s_v) Gram matrix ⟨u_i, v_j⟩ in
+  ONE pass / one reduction (tree: per-leaf ``dot_general`` contractions, one
+  scalar-matrix all-reduce under pjit; flat: the fused Pallas ``dots_block``
+  kernel). This is the s-step solvers' single communication point per s
+  Krylov iterations (core/sstep.py),
+* ``block_combine``                — C @ block: materialize linear
+  combinations of the block columns (one pass for any number of outputs).
+
 Shared solver components (used by ``cg``/``pcg``/``bicgstab`` so the logic
 exists exactly once):
 
@@ -111,6 +129,49 @@ class TreeVectorBackend:
         d1 = None if r0s is None else tm.tree_dot(r, r0s)
         return r, d1, tm.tree_dot(r, r)
 
+    # -- block (multi-vector) ops: the BlockVectorBackend extension ---------
+    # A tree block is a pytree whose leaves carry a leading stack axis —
+    # identical to what the block curvature products (core/blocks.py)
+    # produce, so lift_block/lower_block are identities here.
+    def block_stack(self, vecs):
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *vecs)
+
+    def block_col(self, block, j):
+        return jax.tree_util.tree_map(lambda x: x[j], block)
+
+    def lift_block(self, stacked):
+        return stacked
+
+    def lower_block(self, block):
+        return block
+
+    def wrap_block_op(self, A_blk: Op) -> Op:
+        return A_blk
+
+    def gram(self, U, V):
+        """(s_u, s_v) matrix of ⟨u_i, v_j⟩ in f32 — one reduction.
+
+        Per-leaf ``dot_general`` contracting every non-stack axis (NOT a
+        reshape-to-2D matmul: a flatten of a multi-axis-sharded leaf is
+        unrepresentable in GSPMD — same hazard tree_dot documents, §Perf
+        pair A). Under pjit this is a per-shard contraction + one small
+        (s_u × s_v) all-reduce: the s-step cycle's single sync.
+        """
+        parts = [
+            jax.lax.dot_general(
+                x.astype(jnp.float32), y.astype(jnp.float32),
+                ((tuple(range(1, x.ndim)), tuple(range(1, y.ndim))), ((), ())),
+            )
+            for x, y in zip(jax.tree_util.tree_leaves(U), jax.tree_util.tree_leaves(V))
+        ]
+        return jnp.sum(jnp.stack(parts), axis=0)
+
+    def block_combine(self, coeffs, U):
+        """coeffs @ block: (s,) coeffs → one vector, (m, s) → an m-block."""
+        return jax.tree_util.tree_map(
+            lambda x: jnp.tensordot(coeffs, x.astype(jnp.float32), axes=1), U
+        )
+
 
 class FlatVectorBackend:
     """Flat-buffer backend over the fused Pallas kernels.
@@ -191,6 +252,44 @@ class FlatVectorBackend:
             s, As, s if r0s is None else r0s, gamma, interpret=self._interpret
         )
         return r, (None if r0s is None else d1), d2
+
+    # -- block (multi-vector) ops: the BlockVectorBackend extension ---------
+    # A flat block is an (s, n) f32 matrix — one row per Krylov vector.
+    def block_stack(self, vecs):
+        return jnp.stack(vecs)
+
+    def block_col(self, block, j):
+        return block[j]
+
+    def lift_block(self, stacked):
+        """Stacked pytree (leading s axis on every leaf) → (s, n) matrix."""
+        leaves = jax.tree_util.tree_leaves(stacked)
+        s = leaves[0].shape[0]
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(s, -1) for l in leaves], axis=1
+        )
+
+    def lower_block(self, block):
+        """(s, n) matrix → stacked pytree (leading s axis on every leaf)."""
+        s = block.shape[0]
+        parts = (
+            jnp.split(block, self._offsets[:-1], axis=1)
+            if len(self._sizes) > 1 else [block]
+        )
+        leaves = [p.reshape((s,) + sh) for p, sh in zip(parts, self._shapes)]
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def wrap_block_op(self, A_blk: Op) -> Op:
+        return lambda M: self.lift_block(A_blk(self.lower_block(M)))
+
+    def gram(self, U, V):
+        """(s_u, s_v) Gram via the fused Pallas ``dots_block`` kernel: every
+        ⟨u_i, v_j⟩ from ONE pass over the stacked data (the s-step cycle's
+        single reduction)."""
+        return self._kops.gram_block(U, V, interpret=self._interpret)
+
+    def block_combine(self, coeffs, U):
+        return coeffs @ U
 
 
 BACKENDS = ("tree", "flat")

@@ -77,6 +77,18 @@ class KrylovResult(NamedTuple):
     nc_curv: jax.Array     # dᵀGd / ‖d‖²  for the reported nc_dir (0 if none)
     iters: jax.Array       # Krylov iterations executed
     residual: jax.Array    # final ‖b - A x‖
+    syncs: jax.Array       # blocking scalar-producing reductions the solve
+                           # issued: one per iteration for the standard
+                           # recurrences (each iteration's dots gate the next
+                           # scalar step), one GRAM reduction per s-iteration
+                           # cycle for the s-step solvers (core/sstep.py) —
+                           # the quantity benchmarks/comm_model.py's sync
+                           # formulas count
+    breakdown: jax.Array   # bool: recurrence/basis breakdown occurred
+                           # (Bi-CG-STAB ρ/ω collapse; s-step Gram-
+                           # factorization guard — for the s-step solvers
+                           # with fallback=True this also means the standard
+                           # fallback solve ran)
 
 
 def _resolve(backend):
@@ -133,9 +145,11 @@ def _cg_engine(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float,
     )
     x, r, _, _, rr, k, _, nc = jax.lax.while_loop(cond, body, init)
     # (P)CG on the (damped, PSD-unless-truncated) system is φ-monotone:
-    # best == last.
+    # best == last. One blocking reduction per iteration (the dots that
+    # produce α/β gate the next step): syncs == iters.
     x, r, nc_dir = be.lower(x), be.lower(r), be.lower(nc.dir)
-    return KrylovResult(x, r, x, r, nc_dir, nc.found, nc.curv, k, jnp.sqrt(rr))
+    return KrylovResult(x, r, x, r, nc_dir, nc.found, nc.curv, k, jnp.sqrt(rr),
+                        syncs=k, breakdown=jnp.zeros((), bool))
 
 
 def cg(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
@@ -186,11 +200,11 @@ def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
     r0_star = r0
 
     def cond(carry):
-        (_, _, _, _, k, done, _, _) = carry
+        (_, _, _, _, k, done, _, _, _) = carry
         return jnp.logical_and(k < max_iters, jnp.logical_not(done))
 
     def body(carry):
-        x, r, p, rho, k, done, nc, best = carry
+        x, r, p, rho, k, done, nc, best, broke = carry
         phat = prec(p)
         v = A_(phat)                                     # A p̂_j
         v_phat, phat_sq = be.dot2(v, phat)
@@ -221,16 +235,19 @@ def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
         phi = phi_value(be, b_, x, r)
         best = best_update(be, x, r, phi, jnp.logical_not(breakdown), best)
         done_new = jnp.logical_or(breakdown, jnp.sqrt(rr_new) < tol * b_norm)
-        return (x, r, p, rho_out, k + 1, done_new, nc, best)
+        return (x, r, p, rho_out, k + 1, done_new, nc, best,
+                jnp.logical_or(broke, breakdown))
 
     init = (
         x0_, r0, r0, be.dot(r0, r0_star), jnp.zeros((), jnp.int32),
         be.norm(r0) < tol * b_norm, nc_init(be, b_), best_init(be, b_, x0_, r0),
+        jnp.zeros((), bool),
     )
-    x, r, _, _, k, _, nc, best = jax.lax.while_loop(cond, body, init)
+    x, r, _, _, k, _, nc, best, broke = jax.lax.while_loop(cond, body, init)
     return KrylovResult(
         be.lower(x), be.lower(r), be.lower(best.x), be.lower(best.r),
         be.lower(nc.dir), nc.found, nc.curv, k, be.norm(r),
+        syncs=k, breakdown=broke,
     )
 
 

@@ -1,0 +1,480 @@
+"""Communication-avoiding (s-step) Krylov solvers over the block backend.
+
+The paper's Fig. 5 scaling story is gated by one synchronization per Krylov
+iteration: the recurrence computes a dot product, waits for the scalar, and
+only then can take the next step (α and β gate everything downstream). With
+the curvature product reduced to a cheap cached linear map (PR 2), that
+blocking scalar round-trip is the dominant per-iteration cost at scale — it
+is pure latency, and it cannot be overlapped because the recurrence is a
+strict chain through it.
+
+The s-step (communication-avoiding) reformulation (Chronopoulos & Gear;
+Hoemmen; Carson) breaks the chain: each **cycle** first grows the Krylov
+space s steps ahead with a *monomial basis* — matvecs only, no interleaved
+scalars — then computes EVERY dot product the next s iterations will need as
+one Gram matrix of the basis (``be.gram``: one reduction), and finally runs
+the s iterations as scalar recurrences **in basis coordinates** (O(s²)
+flops, zero communication). Blocking synchronizations per s iterations: one,
+instead of s. The basis matvec *products* still move the same bytes, but
+they form a dependency chain with no scalar gates — under the paper's
+data-parallel schedule their reduces pipeline back-to-back instead of
+alternating with scalar round-trips. ``benchmarks/comm_model.py`` carries
+the resulting sync model (``1 + ceil(K/s) + E`` vs ``1 + K + E``) and
+``benchmarks/sstep_bench.py`` measures the executed counts
+(``KrylovResult.syncs``).
+
+The costs, stated honestly (EXPERIMENTS.md §Perf pair E):
+
+* **Extra operator applications.** The basis needs power chains of both the
+  direction p and the residual r (they span different spaces after the first
+  iteration), so a cycle performs 2s−1 (CG) / 4s−1 (Bi-CG-STAB) products for
+  s iterations — asymptotically ~2× the standard recurrence's s / 2s. The
+  chains advance in lock-step, so the products pair into width-2 **block
+  curvature products** (``A_block`` — core/blocks.py): the cached
+  linearization residuals are read once per level instead of once per
+  chain, clawing back much of the overhead. s-step wins exactly when the
+  latency saved by s× fewer blocking syncs exceeds the extra product
+  bandwidth — the paper's small-batch / many-nodes regime, where Fig. 5
+  shows synchronization is what breaks scaling.
+* **Basis conditioning.** The monomial basis degenerates like the power
+  method (κ(V) grows with κ(A)^s); in f32 this is THE failure mode. Every
+  cycle factorizes the (normalized) Gram of each power segment — Cholesky,
+  the cheapest PD certificate — and declares **breakdown** when a pivot
+  collapses (or the Gram is non-finite). With ``fallback=True`` (the
+  ``hf_step`` default) a breakdown hands the iterate to the standard
+  solver mid-stream: correctness never depends on the basis surviving.
+* **Memory.** A cycle keeps 2s+1 / 4s+1 model-sized basis vectors live
+  (vs O(1) iterate vectors for the standard recurrences).
+
+Both solvers return the same ``KrylovResult`` as ``core/solvers.py``, with
+the same free byproducts: negative-curvature capture (the probe's dᵀAd and
+dᵀd are Gram quadratic forms — literally free here) and, for Bi-CG-STAB,
+φ-best tracking (⟨b,x⟩ and ⟨x,r⟩ come from three extra columns appended to
+the same Gram reduction).
+
+Backend story: everything runs on the ``BlockVectorBackend`` extension
+(core/krylov.py) — "tree" keeps the basis as a stacked pytree
+(sharding-preserving Gram via per-leaf contractions + one small all-reduce),
+"flat" stacks rows into an (s, n) matrix and computes the Gram with the
+fused Pallas ``dots_block`` kernel (one pass over the stacked data).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .krylov import EPS as _EPS, NCState, best_init, BestState, guard_div, nc_init
+from .solvers import KrylovResult, bicgstab, cg, _resolve
+from .tree_math import tree_where
+
+Op = Callable[[Any], Any]
+
+# Breakdown threshold on the *normalized* Gram's Cholesky pivots: a pivot of
+# p means the newest basis vector is only p away (in relative norm) from the
+# span of the previous ones, so coordinate round-off is amplified by ~1/p.
+# 1e-4 keeps f32 cycles that still converge cleanly (measured: depth-4/5
+# chains on moderately conditioned systems sit at 2e-4..4e-3 and recover the
+# standard solution to 1e-7) while catching the genuinely degenerate bases
+# (deep chains / ill-conditioned operators collapse to <1e-7 or NaN).
+GUARD_PIVOT = 1e-4
+
+
+def _shift(segments) -> jax.Array:
+    """Change-of-basis matrix T for a concatenation of monomial power chains:
+    A·(V c) = V·(T c). Within each segment T maps e_j ↦ e_{j+1}; the last
+    column of each segment is zero (the recurrences never reach it — that is
+    precisely the s-iterations-per-cycle budget)."""
+    m = sum(segments)
+    T = np.zeros((m, m), np.float32)
+    start = 0
+    for seg in segments:
+        for j in range(seg - 1):
+            T[start + j + 1, start + j] = 1.0
+        start += seg
+    return jnp.asarray(T)
+
+
+def _onehot(m: int, j: int) -> jax.Array:
+    return jnp.zeros((m,), jnp.float32).at[j].set(1.0)
+
+
+def _gram_ok(G, segments, guard_pivot: float) -> jax.Array:
+    """Basis-conditioning guard on the Gram factorization.
+
+    Normalizes G to a correlation matrix (so near-converged tiny residual
+    chains are not flagged for scale alone) and Cholesky-factorizes each
+    power segment separately — across-segment rank deficiency is legitimate
+    (first cycle has p ≡ r, so the two chains coincide exactly) while
+    within-segment pivot collapse is the monomial-degeneracy signal.
+    """
+    d = jnp.sqrt(jnp.clip(jnp.diagonal(G), 0.0))
+    dn = 1.0 / jnp.maximum(d, _EPS)
+    Gn = G * jnp.outer(dn, dn)
+    ok = jnp.all(jnp.isfinite(G))
+    start = 0
+    for seg in segments:
+        L = jnp.linalg.cholesky(Gn[start:start + seg, start:start + seg])
+        piv = jnp.diagonal(L)
+        ok = jnp.logical_and(
+            ok,
+            jnp.logical_and(jnp.all(jnp.isfinite(L)), jnp.min(piv) > guard_pivot),
+        )
+        start += seg
+    return ok
+
+
+def _pair_apply(be, A_, Ab_):
+    """Advance both power chains one level: (A w, A u) as ONE width-2 block
+    curvature product when a block operator is available (the cached
+    linearization residuals are read once for the pair — core/blocks.py),
+    two singles otherwise."""
+    if Ab_ is None:
+        return lambda w, u: (A_(w), A_(u))
+
+    def pair(w, u):
+        out = Ab_(be.block_stack([w, u]))
+        return be.block_col(out, 0), be.block_col(out, 1)
+
+    return pair
+
+
+def _merge_fallback(res: KrylovResult, run_standard) -> KrylovResult:
+    """On basis breakdown, hand the iterate to the standard solver (traced
+    into the other ``lax.cond`` branch — it only executes on breakdown) and
+    merge the byproducts: the most-negative NC direction wins, iteration and
+    sync counts accumulate, and ``breakdown=True`` records that the fallback
+    ran."""
+    def fb(r):
+        std = run_standard(r.x)
+        std_better = std.nc_curv < r.nc_curv
+        return KrylovResult(
+            std.x, std.r, std.x_best, std.r_best,
+            tree_where(std_better, std.nc_dir, r.nc_dir),
+            jnp.logical_or(std.nc_found, r.nc_found),
+            jnp.minimum(std.nc_curv, r.nc_curv),
+            r.iters + std.iters, std.residual,
+            syncs=r.syncs + std.syncs, breakdown=jnp.ones((), bool),
+        )
+
+    return jax.lax.cond(res.breakdown, fb, lambda r: r, res)
+
+
+def sstep_cg(A: Op, b, x0, *, lam, s: int, max_iters: int, tol: float = 5e-3,
+             backend=None, A_block: Optional[Op] = None,
+             fallback: bool = True,
+             guard_pivot: float = GUARD_PIVOT) -> KrylovResult:
+    """s-step CG with Martens truncation and free negative-curvature capture.
+
+    Mathematically iteration-for-iteration identical to ``solvers.cg`` (in
+    exact arithmetic): each cycle builds the monomial basis
+    [p, Ap, …, Aˢp, r, Ar, …, A^{s−1}r], reduces its Gram ONCE, and runs s
+    CG steps in coordinates. ``A_block`` (optional) applies the operator to
+    a stacked pair per chain level. ``fallback`` re-enters ``solvers.cg``
+    from the current iterate if the Gram factorization flags the basis.
+    """
+    be = _resolve(backend)
+    A_ = be.wrap_op(A)
+    Ab_ = None if A_block is None else be.wrap_block_op(A_block)
+    pair = _pair_apply(be, A_, Ab_)
+    b_ = be.lift(b)
+    x0_ = be.lift(x0)
+    b_norm = be.norm(b_)
+    r0 = be.sub(b_, A_(x0_))
+    rr0 = be.dot(r0, r0)
+    m = 2 * s + 1
+    T = _shift((s + 1, s))
+    e_p, e_r = _onehot(m, 0), _onehot(m, s + 1)
+
+    def cond(carry):
+        (_, _, _, _, k, done, _, _, _) = carry
+        return jnp.logical_and(k < max_iters, jnp.logical_not(done))
+
+    def body(carry):
+        x, r, p, rr, k, done, brk0, nc, syncs = carry
+        # ---- grow the space s steps ahead: matvecs only, no scalar gates --
+        pch, rch = [p], [r]
+        for _ in range(s - 1):
+            w, u = pair(pch[-1], rch[-1])
+            pch.append(w)
+            rch.append(u)
+        pch.append(A_(pch[-1]))                      # Aˢp (p-chain is longer)
+        V = be.block_stack(pch + rch)
+        # ---- the cycle's ONE reduction: every dot for s iterations --------
+        G = be.gram(V, V)
+        G = 0.5 * (G + G.T)
+        syncs = syncs + 1
+        brk = jnp.logical_not(_gram_ok(G, (s + 1, s), guard_pivot))
+
+        # ---- s CG iterations as O(s²) coordinate recurrences --------------
+        p_c, r_c = e_p, e_r
+        x_c = jnp.zeros((m,), jnp.float32)
+        rr_c = G[s + 1, s + 1]
+        stop = brk
+        it = jnp.zeros((), jnp.int32)
+        cyc_found = jnp.zeros((), bool)
+        cyc_curv = nc.curv
+        cyc_imp = jnp.zeros((), bool)
+        nc_c = jnp.zeros((m,), jnp.float32)
+        for j in range(s):
+            active = jnp.logical_and(jnp.logical_not(stop), k + j < max_iters)
+            Tp = T @ p_c
+            pAp = p_c @ (G @ Tp)
+            p_sq = p_c @ (G @ p_c)
+            # NC probe — the (dᵀAd, dᵀd) pair is two Gram quadratic forms
+            raw = (pAp - lam * p_sq) / jnp.maximum(p_sq, _EPS)
+            is_nc = jnp.logical_and(active, raw < 0.0)
+            better = jnp.logical_and(is_nc, raw < cyc_curv)
+            nc_c = jnp.where(
+                better, p_c / jnp.sqrt(jnp.maximum(p_sq, _EPS)), nc_c
+            )
+            cyc_curv = jnp.where(better, raw, cyc_curv)
+            cyc_imp = jnp.logical_or(cyc_imp, better)
+            cyc_found = jnp.logical_or(cyc_found, is_nc)
+            # Martens truncation — same freeze semantics as solvers._cg_engine
+            trunc = pAp <= _EPS
+            step_ok = jnp.logical_and(active, jnp.logical_not(trunc))
+            alpha = rr_c / jnp.maximum(pAp, _EPS)
+            x_c = jnp.where(step_ok, x_c + alpha * p_c, x_c)
+            r_new = r_c - alpha * Tp
+            rr_new = r_new @ (G @ r_new)
+            beta = rr_new / jnp.maximum(rr_c, _EPS)
+            p_new = r_new + beta * p_c
+            r_c = jnp.where(step_ok, r_new, r_c)
+            p_c = jnp.where(step_ok, p_new, p_c)
+            rr_c = jnp.where(step_ok, rr_new, rr_c)
+            it = it + active.astype(jnp.int32)
+            conv = jnp.sqrt(jnp.maximum(rr_c, 0.0)) < tol * b_norm
+            stop = jnp.logical_or(
+                stop,
+                jnp.logical_or(jnp.logical_and(active, trunc),
+                               jnp.logical_and(step_ok, conv)),
+            )
+
+        # ---- materialize the cycle: one combined pass over the basis ------
+        # On basis breakdown the coords are still the one-hot inits, but the
+        # overflowed basis may hold inf (0·inf = NaN in the combine) — keep
+        # the carried vectors instead.
+        out = be.block_combine(jnp.stack([x_c, r_c, p_c, nc_c]), V)
+        x = be.where(brk, x, be.axpy(1.0, be.block_col(out, 0), x))
+        r = be.where(brk, r, be.block_col(out, 1))
+        p = be.where(brk, p, be.block_col(out, 2))
+        nc = NCState(
+            jnp.logical_or(nc.found, cyc_found),
+            be.where(cyc_imp, be.block_col(out, 3), nc.dir),
+            jnp.where(cyc_imp, cyc_curv, nc.curv),
+        )
+        return (x, r, p, rr_c, k + it, stop, jnp.logical_or(brk0, brk),
+                nc, syncs)
+
+    init = (
+        x0_, r0, r0, rr0, jnp.zeros((), jnp.int32),
+        jnp.sqrt(rr0) < tol * b_norm, jnp.zeros((), bool),
+        nc_init(be, b_), jnp.zeros((), jnp.int32),
+    )
+    x, r, _, rr, k, _, brk, nc, syncs = jax.lax.while_loop(cond, body, init)
+    x, r, nc_dir = be.lower(x), be.lower(r), be.lower(nc.dir)
+    res = KrylovResult(x, r, x, r, nc_dir, nc.found, nc.curv, k,
+                       jnp.sqrt(jnp.maximum(rr, 0.0)),
+                       syncs=syncs, breakdown=brk)
+    if not fallback:
+        return res
+    return _merge_fallback(
+        res,
+        lambda xs: cg(A, b, xs, lam=lam, max_iters=max_iters, tol=tol,
+                      backend=backend),
+    )
+
+
+def sstep_bicgstab(A: Op, b, x0, *, lam, s: int, max_iters: int,
+                   tol: float = 5e-3, backend=None,
+                   A_block: Optional[Op] = None,
+                   fallback: bool = True,
+                   guard_pivot: float = GUARD_PIVOT) -> KrylovResult:
+    """s-step Bi-CG-STAB (CA-BICGSTAB, Carson) with NC capture and φ-best.
+
+    Each cycle builds [p, Ap, …, A²ˢp, r, Ar, …, A^{2s−1}r] (an iteration
+    applies A twice, so the chains run 2s deep for s iterations), appends
+    three probe columns [r0*, b, x] to the Gram's right operand — ⟨·,r0*⟩
+    drives ρ/α, ⟨·,b⟩ and ⟨·,x⟩ make the φ-best tracker free — and reduces
+    everything in ONE ``be.gram`` call. Breakdown covers both the
+    Gram-factorization guard and ``solvers.bicgstab``'s ρ/ω collapse (which
+    freezes the iterate, like the standard solver, and is reported in
+    ``KrylovResult.breakdown``); with ``fallback`` either kind re-enters
+    the standard solver from the current iterate — for ρ/ω collapse that
+    restart draws a fresh shadow residual r0*, the classic recovery.
+    """
+    be = _resolve(backend)
+    A_ = be.wrap_op(A)
+    Ab_ = None if A_block is None else be.wrap_block_op(A_block)
+    pair = _pair_apply(be, A_, Ab_)
+    b_ = be.lift(b)
+    x0_ = be.lift(x0)
+    b_norm = be.norm(b_)
+    r0 = be.sub(b_, A_(x0_))
+    r0_star = r0
+    rn0 = be.norm(r0)
+    bx0 = be.dot(b_, x0_)
+    m = 4 * s + 1
+    T = _shift((2 * s + 1, 2 * s))
+    e_p, e_r = _onehot(m, 0), _onehot(m, 2 * s + 1)
+
+    def cond(carry):
+        (_, _, _, _, _, k, done, _, _, _, _) = carry
+        return jnp.logical_and(k < max_iters, jnp.logical_not(done))
+
+    def body(carry):
+        x, r, p, bx, rr, k, done, brk0, nc, best, syncs = carry
+        # ---- power chains, 2s deep (two A-applications per iteration) -----
+        pch, rch = [p], [r]
+        for _ in range(2 * s - 1):
+            w, u = pair(pch[-1], rch[-1])
+            pch.append(w)
+            rch.append(u)
+        pch.append(A_(pch[-1]))                     # A²ˢp
+        cols = pch + rch
+        V = be.block_stack(cols)
+        W = be.block_stack(cols + [r0_star, b_, x])
+        # ---- ONE reduction: basis Gram + the r0*/b/x probe columns --------
+        Ge = be.gram(V, W)
+        G = 0.5 * (Ge[:, :m] + Ge[:, :m].T)
+        g_r0, g_b, g_x0 = Ge[:, m], Ge[:, m + 1], Ge[:, m + 2]
+        syncs = syncs + 1
+        brk_basis = jnp.logical_not(_gram_ok(G, (2 * s + 1, 2 * s), guard_pivot))
+
+        # ---- s Bi-CG-STAB iterations in coordinates -----------------------
+        p_c, r_c = e_p, e_r
+        x_c = jnp.zeros((m,), jnp.float32)
+        rho = g_r0[2 * s + 1]
+        rr_c = G[2 * s + 1, 2 * s + 1]
+        stop = brk_basis
+        it = jnp.zeros((), jnp.int32)
+        brk_rec = jnp.zeros((), bool)
+        cyc_found = jnp.zeros((), bool)
+        cyc_curv = nc.curv
+        cyc_imp = jnp.zeros((), bool)
+        nc_c = jnp.zeros((m,), jnp.float32)
+        best_xc = jnp.zeros((m,), jnp.float32)
+        best_rc = jnp.zeros((m,), jnp.float32)
+        best_phi = best.phi
+        best_imp = jnp.zeros((), bool)
+
+        def probe(active, cand_c, quad, sq, state):
+            nc_c, cyc_curv, cyc_imp, cyc_found = state
+            raw = (quad - lam * sq) / jnp.maximum(sq, _EPS)
+            is_nc = jnp.logical_and(active, raw < 0.0)
+            better = jnp.logical_and(is_nc, raw < cyc_curv)
+            nc_c = jnp.where(
+                better, cand_c / jnp.sqrt(jnp.maximum(sq, _EPS)), nc_c
+            )
+            return (nc_c, jnp.where(better, raw, cyc_curv),
+                    jnp.logical_or(cyc_imp, better),
+                    jnp.logical_or(cyc_found, is_nc))
+
+        for j in range(s):
+            active = jnp.logical_and(jnp.logical_not(stop), k + j < max_iters)
+            v_c = T @ p_c                                    # A p̂_j
+            Gv = G @ v_c
+            pAp = p_c @ Gv
+            p_sq = p_c @ (G @ p_c)
+            nc_state = probe(active, p_c, pAp, p_sq,
+                             (nc_c, cyc_curv, cyc_imp, cyc_found))
+            alpha, bka = guard_div(rho, v_c @ g_r0)
+            s_c = r_c - alpha * v_c                          # ŝ_j
+            t_c = T @ s_c                                    # A ŝ_j
+            Gt = G @ t_c
+            ts = s_c @ Gt
+            ss = s_c @ (G @ s_c)
+            nc_c, cyc_curv, cyc_imp, cyc_found = probe(
+                active, s_c, ts, ss, nc_state)
+            tt = t_c @ Gt
+            bkg = tt < _EPS
+            gamma = ts / jnp.where(bkg, 1.0, tt)
+            x_new = x_c + alpha * p_c + gamma * s_c
+            r_new = s_c - gamma * t_c
+            rho_new = r_new @ g_r0
+            rr_new = r_new @ (G @ r_new)
+            beta = (rho_new / jnp.where(jnp.abs(rho) < _EPS, 1.0, rho)) * (
+                alpha / jnp.where(jnp.abs(gamma) < _EPS, 1.0, gamma)
+            )
+            p_new = r_new + beta * (p_c - gamma * v_c)
+            bk = jnp.logical_or(bka, bkg)
+            step_ok = jnp.logical_and(active, jnp.logical_not(bk))
+            x_c = jnp.where(step_ok, x_new, x_c)
+            r_c = jnp.where(step_ok, r_new, r_c)
+            p_c = jnp.where(step_ok, p_new, p_c)
+            rho = jnp.where(step_ok, rho_new, rho)
+            rr_c = jnp.where(step_ok, rr_new, rr_c)
+            # φ-best: ⟨b,x⟩ and ⟨x,r⟩ from the probe columns — no extra dots
+            phi = -0.5 * (bx + g_b @ x_c) - 0.5 * (
+                g_x0 @ r_c + x_c @ (G @ r_c)
+            )
+            improved = jnp.logical_and(step_ok, phi < best_phi)
+            best_xc = jnp.where(improved, x_c, best_xc)
+            best_rc = jnp.where(improved, r_c, best_rc)
+            best_phi = jnp.where(improved, phi, best_phi)
+            best_imp = jnp.logical_or(best_imp, improved)
+            it = it + active.astype(jnp.int32)
+            brk_rec = jnp.logical_or(brk_rec, jnp.logical_and(active, bk))
+            conv = jnp.sqrt(jnp.maximum(rr_c, 0.0)) < tol * b_norm
+            stop = jnp.logical_or(
+                stop,
+                jnp.logical_or(jnp.logical_and(active, bk),
+                               jnp.logical_and(step_ok, conv)),
+            )
+
+        # ---- materialize the cycle ----------------------------------------
+        # On basis breakdown the coords are still the one-hot inits, but the
+        # overflowed basis may hold inf (0·inf = NaN in the combine) — keep
+        # the carried vectors/scalars instead.
+        out = be.block_combine(
+            jnp.stack([x_c, r_c, p_c, nc_c, best_xc, best_rc]), V
+        )
+        x_new_v = be.where(
+            brk_basis, x, be.axpy(1.0, be.block_col(out, 0), x))
+        xb_v = be.axpy(1.0, be.block_col(out, 4), x)  # x_start + V·best_xc
+        best = BestState(
+            be.where(best_imp, xb_v, best.x),
+            be.where(best_imp, be.block_col(out, 5), best.r),
+            best_phi,
+        )
+        nc = NCState(
+            jnp.logical_or(nc.found, cyc_found),
+            be.where(cyc_imp, be.block_col(out, 3), nc.dir),
+            jnp.where(cyc_imp, cyc_curv, nc.curv),
+        )
+        # Recurrence (ρ/ω) collapse is a breakdown too: reporting it keeps
+        # parity with solvers.bicgstab's breakdown flag, and routing it
+        # through the fallback restarts the standard solver with a FRESH
+        # r0* from the frozen iterate — the classic Bi-CG-STAB restart
+        # remedy, which typically recovers where the stale shadow residual
+        # cannot.
+        return (x_new_v,
+                be.where(brk_basis, r, be.block_col(out, 1)),
+                be.where(brk_basis, p, be.block_col(out, 2)),
+                jnp.where(brk_basis, bx, bx + g_b @ x_c), rr_c, k + it, stop,
+                jnp.logical_or(brk0, jnp.logical_or(brk_basis, brk_rec)),
+                nc, best, syncs)
+
+    init = (
+        x0_, r0, r0, bx0, rn0 * rn0, jnp.zeros((), jnp.int32),
+        rn0 < tol * b_norm, jnp.zeros((), bool), nc_init(be, b_),
+        best_init(be, b_, x0_, r0), jnp.zeros((), jnp.int32),
+    )
+    x, r, _, _, _, k, _, brk, nc, best, syncs = jax.lax.while_loop(
+        cond, body, init)
+    res = KrylovResult(
+        be.lower(x), be.lower(r), be.lower(best.x), be.lower(best.r),
+        be.lower(nc.dir), nc.found, nc.curv, k, be.norm(r),
+        syncs=syncs, breakdown=brk,
+    )
+    if not fallback:
+        return res
+    return _merge_fallback(
+        res,
+        lambda xs: bicgstab(A, b, xs, lam=lam, max_iters=max_iters, tol=tol,
+                            backend=backend),
+    )

@@ -8,6 +8,11 @@ dot products they feed removes whole HBM passes:
   * ``residual_dots``:  r = s − γ·As; ⟨r,r0*⟩; ⟨r,r⟩ (3 reads 1 write + scalars,
                         vs 2r/1w + 2×2r for the separate dots)
   * ``dot2``:           ⟨u,v⟩, ⟨v,v⟩                 (2 reads, vs 4)
+  * ``dots_block``:     the (s_u × s_v) Gram block UVᵀ of two stacked vector
+                        blocks in ONE pass over the data (s_u + s_v reads
+                        total, vs 2·s_u·s_v reads for pairwise dot2 calls) —
+                        the s-step solvers' all-dots-for-s-iterations reduce
+                        (core/sstep.py).
 
 1-D grid over VMEM-sized chunks; per-block partial sums land in a
 (n_blocks,)-shaped output reduced by the (tiny) jnp.sum in ops.py. All
@@ -90,6 +95,45 @@ def residual_dots(s, As, r0s, gamma, *, block=BLOCK, interpret=False):
         interpret=interpret,
     )(scal(gamma), s, As, r0s)
     return r, d1, d2
+
+
+def _dots_block_kernel(u_ref, v_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)      # (s_u, block)
+    v = v_ref[...].astype(jnp.float32)      # (s_v, block)
+    o_ref[0] = jax.lax.dot_general(
+        u, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+# The Gram kernel streams s_u + s_v row vectors per grid step, so its column
+# tile is narrower than the single-vector fusions' (s rows of 16k f32 =
+# 64 KiB/row in VMEM; at s ≤ 16 this stays well inside the ~16 MB budget).
+BLOCK_GRAM = 16 * 1024
+
+
+def dots_block(U, V, *, block=BLOCK_GRAM, interpret=False):
+    """Per-column-block partials of the Gram matrix U @ Vᵀ.
+
+    ``U``: (s_u, n), ``V``: (s_v, n) stacked flat f32 vectors (n padded to a
+    block multiple, rows padded to the sublane tile by ops.py). Returns
+    (n_blocks, s_u, s_v) partials; the (tiny) reduction over blocks — the
+    s-step solvers' ONE communication point per s Krylov iterations — happens
+    in ops.py.
+    """
+    su, n = U.shape
+    sv = V.shape[0]
+    nb = pl.cdiv(n, block)
+    return pl.pallas_call(
+        _dots_block_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((su, block), lambda i: (0, i)),
+            pl.BlockSpec((sv, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, su, sv), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, su, sv), jnp.float32),
+        interpret=interpret,
+    )(U, V)
 
 
 def _dot2_kernel(u_ref, v_ref, d1_ref, d2_ref):

@@ -9,7 +9,11 @@ axpy/dot recurrence through these fusions —
   * ``bicgstab_residual_dots``— r = s − γ·t fused with ⟨r,r0*⟩ and ⟨r,r⟩
                                 (also the CG residual update + ‖r‖²),
   * ``dot2``                  — ⟨u,v⟩, ⟨v,v⟩ in one pass (curvature probes,
-                                Bi-CG-STAB ω, CG α denominators).
+                                Bi-CG-STAB ω, CG α denominators),
+  * ``gram_block``            — the (s_u × s_v) Gram matrix UVᵀ of two stacked
+                                vector blocks in one pass (the s-step solvers'
+                                all-dots-for-s-iterations reduction —
+                                core/sstep.py via the Krylov block backend).
 
 Each fusion removes whole HBM passes over model-sized vectors relative to
 the per-leaf pytree path (see cg_fused.py for the traffic accounting) — the
@@ -73,6 +77,34 @@ def bicgstab_residual_dots(s, As, r0s, gamma, *, interpret=None):
     rp, _ = _pad_flat(r0s, cg_fused.BLOCK)
     r, d1, d2 = cg_fused.residual_dots(sp, Ap, rp, gamma, interpret=interpret)
     return r[:n], jnp.sum(d1), jnp.sum(d2)
+
+
+def _pad_block_rows(M, block, row_tile=8):
+    """Pad a (s, n) stack to (s_pad, n_pad): columns to a kernel-block
+    multiple, rows to the f32 sublane tile (zero rows/columns contribute
+    zero to every Gram entry)."""
+    s, n = M.shape
+    pad_c = (-n) % block
+    pad_r = (-s) % row_tile
+    if pad_c or pad_r:
+        M = jnp.pad(M, ((0, pad_r), (0, pad_c)))
+    return M, s
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram_block(U, V, *, interpret=None):
+    """Gram matrix U @ Vᵀ of two stacked flat f32 vector blocks.
+
+    ``U``: (s_u, n), ``V``: (s_v, n) → (s_u, s_v) with every entry ⟨u_i, v_j⟩
+    accumulated in one pass over the data (per-column-block partials from the
+    Pallas kernel, reduced here). This is the flat backend's ``gram`` — the
+    single reduction an s-step cycle issues in place of per-iteration dots.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    Up, su = _pad_block_rows(U, cg_fused.BLOCK_GRAM)
+    Vp, sv = _pad_block_rows(V, cg_fused.BLOCK_GRAM)
+    parts = cg_fused.dots_block(Up, Vp, interpret=interpret)
+    return jnp.sum(parts, axis=0)[:su, :sv]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

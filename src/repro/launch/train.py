@@ -39,6 +39,8 @@ def train(
     krylov_backend: str = "tree",
     curvature_mode: str = "linearize",
     curvature_chunk_size: int = 0,
+    sstep: int = 1,
+    sstep_solver: str = "auto",
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
     log_fn=print,
@@ -51,6 +53,7 @@ def train(
         krylov_backend=krylov_backend,
         curvature_mode=curvature_mode,
         curvature_chunk_size=curvature_chunk_size,
+        sstep_s=sstep, sstep_solver=sstep_solver,
     )
     opt = make_optimizer(
         opt_cfg, model.loss_fn, model_out_fn=model.logits_fn,
@@ -113,6 +116,13 @@ def main():
     ap.add_argument("--curvature-chunk-size", type=int, default=0,
                     help="chunked mode: examples per microbatch "
                          "(<=0 = whole curvature batch in one chunk)")
+    ap.add_argument("--sstep", type=int, default=1,
+                    help="s-step (communication-avoiding) Krylov solve: batch "
+                         "the dots of S iterations into one Gram reduction "
+                         "(<=1 = standard per-iteration recurrence)")
+    ap.add_argument("--sstep-solver", default="auto",
+                    choices=["auto", "cg", "bicgstab"],
+                    help="s-step recurrence (auto derives it from --solver)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--history-out", default=None)
@@ -125,6 +135,7 @@ def main():
         krylov_backend=args.krylov_backend,
         curvature_mode=args.curvature_mode,
         curvature_chunk_size=args.curvature_chunk_size,
+        sstep=args.sstep, sstep_solver=args.sstep_solver,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     if args.history_out:

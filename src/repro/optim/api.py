@@ -65,6 +65,8 @@ def make_optimizer(
         krylov_backend=opt.krylov_backend,
         curvature_mode=opt.curvature_mode,
         curvature_chunk_size=opt.curvature_chunk_size,
+        sstep_s=opt.sstep_s,
+        sstep_solver=opt.sstep_solver,
     )
 
     def init(params):

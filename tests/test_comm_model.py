@@ -4,11 +4,15 @@ import math
 from benchmarks.comm_model import (
     dp_floats_per_epoch,
     dp_syncs_per_epoch,
+    hf_floats_per_iteration,
+    hf_sstep_floats_per_iteration,
+    hf_sstep_syncs_per_iteration,
     hf_syncs_per_iteration,
     model_size,
     mp_syncs_per_epoch,
     sgd_syncs_per_epoch,
     speedup_model,
+    sstep_basis_len,
 )
 
 
@@ -46,3 +50,69 @@ def test_speedup_saturates_for_comm_bound():
     sp32 = speedup_model(32, compute_s_per_node_unit=0.01, bytes_per_sync=4e6,
                          syncs=1000)
     assert sp32 < 2.0
+
+
+class TestSStepModel:
+    """s-step (communication-avoiding) HF formulas — core/sstep.py's
+    1 + ceil(K/s) + E sync schedule."""
+
+    def test_syncs_drop_from_K_to_ceil_K_over_s(self):
+        K, E = 10, 3
+        assert hf_syncs_per_iteration(K, E) == 1 + K + E
+        assert hf_sstep_syncs_per_iteration(K, E, 1) == 1 + K + E
+        assert hf_sstep_syncs_per_iteration(K, E, 2) == 1 + 5 + E
+        assert hf_sstep_syncs_per_iteration(K, E, 4) == 1 + math.ceil(10 / 4) + E
+        assert hf_sstep_syncs_per_iteration(K, E, 16) == 1 + 1 + E
+
+    def test_syncs_monotone_nonincreasing_in_s(self):
+        vals = [hf_sstep_syncs_per_iteration(16, 2, s) for s in (1, 2, 4, 8, 16)]
+        assert all(b <= a for a, b in zip(vals, vals[1:]))
+
+    def test_sstep_floats_trade_bytes_for_syncs(self):
+        """Each cycle grows both power chains: 2s−1 model-sized products per
+        s iterations (vs s standard) plus a small Gram — asymptotically ~2×
+        the bytes, for s× fewer blocking syncs."""
+        dims, K, E = (784, 400, 150, 10), 16, 2
+        std = hf_floats_per_iteration(dims, K, E)
+        m = model_size(dims)
+        for s in (2, 4):
+            ss = hf_sstep_floats_per_iteration(dims, K, E, s)
+            cycles = math.ceil(K / s)
+            assert ss > std            # more bytes ...
+            assert ss < 2.0 * std      # ... bounded by the ~2x chain factor
+            # exact product count: 1 gradient + (2s-1) per cycle
+            expected_products = (1 + cycles * (2 * s - 1)) * m
+            assert abs(ss - expected_products) < 0.01 * std  # + Gram only
+
+    def test_sstep_floats_s1_reduces_to_standard_plus_gram(self):
+        dims, K, E = (784, 400, 150, 10), 16, 2
+        std = hf_floats_per_iteration(dims, K, E)
+        ss = hf_sstep_floats_per_iteration(dims, K, E, 1)
+        gram = K * sstep_basis_len(1, "cg") ** 2  # one 3x3 Gram per cycle
+        assert ss == std + gram
+
+    def test_basis_len(self):
+        # CG: [p..A^s p, r..A^{s-1}r] ⇒ 2s+1; Bi-CG-STAB: depth-2s chains
+        assert sstep_basis_len(4, "cg") == 9
+        assert sstep_basis_len(4, "bicgstab") == 17
+        assert sstep_basis_len(1, "cg") == 3
+
+    def test_sstep_executed_counts_match_model(self):
+        """The formula's ceil(K/s) bound holds for the EXECUTED sync counts
+        of an actual s-step solve (KrylovResult.syncs)."""
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core.sstep import sstep_cg
+
+        rng = np.random.RandomState(0)
+        Q = rng.randn(20, 20).astype(np.float32)
+        M = jnp.asarray(Q @ Q.T + 20 * np.eye(20, dtype=np.float32))
+        b = {"v": jnp.asarray(rng.randn(20).astype(np.float32))}
+        x0 = {"v": jnp.zeros(20, jnp.float32)}
+        op = lambda t: {"v": M @ t["v"]}
+        for s in (2, 4):
+            res = sstep_cg(op, b, x0, lam=0.0, s=s, max_iters=16, tol=1e-10)
+            assert not bool(res.breakdown)
+            K_exec = int(res.iters)
+            assert int(res.syncs) <= math.ceil(16 / s)
+            assert int(res.syncs) == math.ceil(K_exec / s)

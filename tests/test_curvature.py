@@ -166,6 +166,52 @@ class TestGradReduceOnce:
         _assert_trees_close(reduced, expect, err=f"{mode}/chunk={chunk}")
 
 
+class TestSharedPrimal:
+    """One jax.linearize(value_and_grad) pass == value_and_grad + a separate
+    linearize-once HVP build (ROADMAP item: shared primal between gradient
+    and curvature when hvp_batch == batch)."""
+
+    def test_matches_separate_builds(self):
+        from repro.core.curvature import shared_primal_hvp
+        model, batch, params, v = _setup()
+        f0, g, hvp = shared_primal_hvp(model.loss_fn, params, batch)
+        f0_ref, g_ref = jax.value_and_grad(model.loss_fn)(params, batch)
+        hvp_ref = make_hvp_op(model.loss_fn, params, batch, mode="linearize")
+        np.testing.assert_allclose(float(f0), float(f0_ref), rtol=1e-6)
+        _assert_trees_close(g, g_ref)
+        _assert_trees_close(hvp(v), hvp_ref(v))
+
+    def test_grad_reduce_applied(self):
+        from repro.core.curvature import shared_primal_hvp
+        model, batch, params, v = _setup()
+        probe = lambda t: jax.tree_util.tree_map(lambda x: x + 1.0, t)
+        _, g0, hvp0 = shared_primal_hvp(model.loss_fn, params, batch)
+        _, g1, hvp1 = shared_primal_hvp(model.loss_fn, params, batch,
+                                        grad_reduce=probe)
+        _assert_trees_close(g1, probe(g0))
+        _assert_trees_close(hvp1(v), probe(hvp0(v)))
+
+    def test_hf_step_shared_vs_separate_paths(self):
+        """hf_step takes the shared-primal path when hvp_batch IS batch and
+        the separate-build path when it is merely equal — both must produce
+        the same step."""
+        model = build_mlp((8, 16, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 64, 8, 4)
+        data_copy = jax.tree_util.tree_map(lambda x: x.copy(), data)
+        params = model.init(jax.random.PRNGKey(1))
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=8, init_damping=5.0)
+        state = hf_init(params, cfg)
+        shared = jax.jit(lambda p, s: hf_step(
+            model.loss_fn, p, s, data, data, cfg))(params, state)
+        separate = jax.jit(lambda p, s: hf_step(
+            model.loss_fn, p, s, data, data_copy, cfg))(params, state)
+        _assert_trees_close(shared[0], separate[0], rtol=1e-5, atol=1e-5)
+        for k in shared[2]:
+            np.testing.assert_allclose(
+                float(shared[2][k]), float(separate[2][k]),
+                rtol=1e-5, atol=1e-5, err_msg=k)
+
+
 class TestHFStepAcrossModes:
     """One hf_step must be numerically identical (to fp noise) for every
     curvature mode on both Krylov vector backends. init_damping=5.0 keeps

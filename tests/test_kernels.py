@@ -118,6 +118,23 @@ if HAVE_HYPOTHESIS:
         _check_residual_dots(n, gamma, seed)
 
 
+@pytest.mark.parametrize("n", [1, 127, 16384, 16385, 70_000])
+@pytest.mark.parametrize("su,sv", [(1, 1), (3, 5), (8, 8), (9, 17)])
+def test_gram_block_matches_matmul(n, su, sv):
+    """The s-step Gram kernel: per-column-block partials of U @ Vᵀ across
+    edge shapes (sub-block, block, block+1, multi-block columns; row counts
+    off the sublane tile)."""
+    key = jax.random.PRNGKey(n + su)
+    U = jax.random.normal(key, (su, n), jnp.float32)
+    V = jax.random.normal(jax.random.fold_in(key, 1), (sv, n), jnp.float32)
+    G = ops.gram_block(U, V, interpret=True)
+    assert G.shape == (su, sv)
+    ref_G = np.asarray(U) @ np.asarray(V).T
+    scale = max(float(np.abs(ref_G).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(G), ref_G, rtol=1e-4,
+                               atol=1e-5 * scale * n ** 0.5)
+
+
 @pytest.mark.parametrize("n", [1, 127, 4096, 65536, 65537, 300_000])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_dot2_shapes_dtypes(n, dtype):

@@ -1,0 +1,436 @@
+"""s-step (communication-avoiding) Krylov subsystem tests.
+
+Covers the three layers the subsystem adds (ISSUE 3):
+  * block backend ops (gram / block_combine / lift_block — tree vs flat via
+    the Pallas ``dots_block`` kernel in interpret mode),
+  * multi-tangent block curvature products (block-HVP == s independent HVPs
+    for every curvature mode),
+  * the s-step solvers themselves: equivalence with the standard
+    recurrences on SPD and indefinite systems for s ∈ {1, 2, 4}, the
+    Gram-factorization breakdown guard + standard-solver fallback, and
+    hf_step parity across s-step × both vector backends.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HFConfig, hf_init, hf_step
+from repro.core.blocks import (
+    block_op_from_single,
+    make_block_gnvp_op,
+    make_block_hvp_op,
+    stack_tangents,
+    unstack_tangents,
+)
+from repro.core.curvature import make_gnvp_op, make_hvp_op
+from repro.core.krylov import get_backend
+from repro.core.solvers import bicgstab, cg
+from repro.core.sstep import sstep_bicgstab, sstep_cg
+from repro.core.tree_math import tree_pseudo_noise
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+
+def _vec(x):
+    """Two-leaf pytree (vector + matrix leaf) to exercise ravel/unravel."""
+    x = np.asarray(x, np.float32)
+    return {"a": jnp.asarray(x[:5]), "b": jnp.asarray(x[5:]).reshape(3, 3)}
+
+
+def _unvec(t):
+    return np.concatenate([np.asarray(t["a"]).ravel(), np.asarray(t["b"]).ravel()])
+
+
+def _mat_op(M):
+    def op(v):
+        f = jnp.concatenate([v["a"].ravel(), v["b"].ravel()])
+        out = M @ f
+        return {"a": out[:5], "b": out[5:].reshape(3, 3)}
+    return op
+
+
+def _flat_be(template):
+    return get_backend("flat", template=template, interpret=True)
+
+
+def _spd():
+    rng = np.random.RandomState(2)
+    Q = rng.randn(14, 14).astype(np.float32)
+    M = jnp.asarray(Q @ Q.T + 14 * np.eye(14, dtype=np.float32))
+    return M, _vec(rng.randn(14)), _vec(np.zeros(14))
+
+
+class TestBlockBackendOps:
+    """The BlockVectorBackend protocol extension, tree vs flat."""
+
+    def _vecs(self, n=3):
+        rng = np.random.RandomState(0)
+        return [_vec(rng.randn(14)) for _ in range(n)]
+
+    def test_gram_matches_pairwise_dots(self):
+        vecs = self._vecs(3)
+        tb = get_backend("tree")
+        fb = _flat_be(vecs[0])
+        Bt = tb.block_stack(vecs)
+        Bf = fb.block_stack([fb.lift(v) for v in vecs])
+        Gt = np.asarray(tb.gram(Bt, Bt))
+        Gf = np.asarray(fb.gram(Bf, Bf))
+        ref = np.array([[float(_unvec(u) @ _unvec(v)) for v in vecs]
+                        for u in vecs])
+        np.testing.assert_allclose(Gt, ref, rtol=1e-5)
+        np.testing.assert_allclose(Gf, ref, rtol=1e-5)
+
+    def test_gram_rectangular(self):
+        vecs = self._vecs(5)
+        tb = get_backend("tree")
+        fb = _flat_be(vecs[0])
+        U, V = vecs[:2], vecs[2:]
+        Gt = np.asarray(tb.gram(tb.block_stack(U), tb.block_stack(V)))
+        Gf = np.asarray(fb.gram(fb.block_stack([fb.lift(u) for u in U]),
+                                fb.block_stack([fb.lift(v) for v in V])))
+        assert Gt.shape == (2, 3)
+        np.testing.assert_allclose(Gt, Gf, rtol=1e-5, atol=1e-6)
+
+    def test_block_combine_matches_manual(self):
+        vecs = self._vecs(3)
+        rng = np.random.RandomState(1)
+        C = rng.randn(2, 3).astype(np.float32)
+        tb = get_backend("tree")
+        fb = _flat_be(vecs[0])
+        out_t = tb.block_combine(jnp.asarray(C), tb.block_stack(vecs))
+        out_f = fb.block_combine(
+            jnp.asarray(C), fb.block_stack([fb.lift(v) for v in vecs]))
+        ref = C @ np.stack([_unvec(v) for v in vecs])
+        for i in range(2):
+            np.testing.assert_allclose(
+                _unvec(tb.block_col(out_t, i)), ref[i], rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(
+                np.asarray(fb.block_col(out_f, i)), ref[i], rtol=1e-5, atol=1e-6)
+
+    def test_lift_lower_block_roundtrip(self):
+        vecs = self._vecs(4)
+        tb = get_backend("tree")
+        fb = _flat_be(vecs[0])
+        stacked = tb.block_stack(vecs)
+        M = fb.lift_block(stacked)
+        assert M.shape == (4, 14)
+        back = fb.lower_block(M)
+        for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_wrap_block_op(self):
+        M, b, _ = _spd()
+        vecs = self._vecs(2)
+        tb = get_backend("tree")
+        fb = _flat_be(b)
+        blk_op = block_op_from_single(_mat_op(M))
+        out_t = tb.wrap_block_op(blk_op)(tb.block_stack(vecs))
+        out_f = fb.wrap_block_op(blk_op)(
+            fb.block_stack([fb.lift(v) for v in vecs]))
+        for i in range(2):
+            ref = np.asarray(M) @ _unvec(vecs[i])
+            np.testing.assert_allclose(_unvec(tb.block_col(out_t, i)), ref,
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(out_f[i]), ref,
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestBlockCurvature:
+    """Block-HVP/GNVP == s independent single products, every mode."""
+
+    def _setup(self):
+        model = build_mlp((8, 12, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 32, 8, 4)
+        params = model.init(jax.random.PRNGKey(1))
+        tangents = [tree_pseudo_noise(params, i) for i in range(3)]
+        return model, data, params, tangents
+
+    @pytest.mark.parametrize("mode,chunk", [
+        ("linearize", 0), ("chunked", 8),
+        pytest.param("naive", 0, marks=pytest.mark.slow),
+        pytest.param("chunked", 10, marks=pytest.mark.slow),
+    ])
+    def test_block_hvp_matches_singles(self, mode, chunk):
+        model, data, params, tangents = self._setup()
+        single = make_hvp_op(model.loss_fn, params, data,
+                             mode=mode, chunk_size=chunk)
+        blk = make_block_hvp_op(model.loss_fn, params, data,
+                                mode=mode, chunk_size=chunk)
+        out = blk(stack_tangents(tangents))
+        for got, v in zip(unstack_tangents(out), tangents):
+            ref = single(v)
+            for a, b in zip(jax.tree_util.tree_leaves(got),
+                            jax.tree_util.tree_leaves(ref)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("mode,chunk", [("linearize", 0), ("chunked", 8)])
+    def test_block_gnvp_matches_singles(self, mode, chunk):
+        model, data, params, tangents = self._setup()
+        single = make_gnvp_op(model.logits_fn, model.out_loss_fn, params, data,
+                              mode=mode, chunk_size=chunk)
+        blk = make_block_gnvp_op(model.logits_fn, model.out_loss_fn, params,
+                                 data, mode=mode, chunk_size=chunk)
+        out = blk(stack_tangents(tangents))
+        for got, v in zip(unstack_tangents(out), tangents):
+            ref = single(v)
+            for a, b in zip(jax.tree_util.tree_leaves(got),
+                            jax.tree_util.tree_leaves(ref)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-5)
+
+    def test_block_op_from_single_shares_linearization(self):
+        model, data, params, tangents = self._setup()
+        single = make_hvp_op(model.loss_fn, params, data, mode="linearize")
+        blk = block_op_from_single(single)
+        out = blk(stack_tangents(tangents))
+        for got, v in zip(unstack_tangents(out), tangents):
+            ref = single(v)
+            for a, b in zip(jax.tree_util.tree_leaves(got),
+                            jax.tree_util.tree_leaves(ref)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-6, atol=1e-6)
+
+
+class TestSStepCG:
+    """s-step CG == standard CG (same math, one Gram reduce per cycle)."""
+
+    @pytest.mark.parametrize("s", [1, 2, 4])
+    def test_matches_standard_on_spd(self, s):
+        M, b, x0 = _spd()
+        rt = cg(_mat_op(M), b, x0, lam=0.0, max_iters=40, tol=1e-8)
+        rs = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=s, max_iters=40, tol=1e-8)
+        assert not bool(rs.breakdown)
+        np.testing.assert_allclose(_unvec(rs.x), _unvec(rt.x),
+                                   rtol=1e-4, atol=1e-4)
+        # cycles, not iterations: the communication-avoiding invariant
+        assert int(rs.syncs) <= math.ceil(int(rs.iters) / s) + 1
+
+    @pytest.mark.parametrize("s", [2, 4])
+    def test_flat_backend_matches_tree(self, s):
+        M, b, x0 = _spd()
+        rt = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=s, max_iters=40, tol=1e-8)
+        rf = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=s, max_iters=40, tol=1e-8,
+                      backend=_flat_be(b))
+        # reduction-order noise can move convergence across a cycle edge:
+        # the invariant is the same solution within at most one extra cycle
+        assert abs(int(rt.iters) - int(rf.iters)) <= s
+        assert abs(int(rt.syncs) - int(rf.syncs)) <= 1
+        np.testing.assert_allclose(_unvec(rt.x), _unvec(rf.x),
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("s", [2, 4])
+    def test_block_operator_path_matches(self, s):
+        M, b, x0 = _spd()
+        A = _mat_op(M)
+        r1 = sstep_cg(A, b, x0, lam=0.0, s=s, max_iters=40, tol=1e-8)
+        r2 = sstep_cg(A, b, x0, lam=0.0, s=s, max_iters=40, tol=1e-8,
+                      A_block=block_op_from_single(A))
+        np.testing.assert_allclose(_unvec(r1.x), _unvec(r2.x),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_nc_capture_on_indefinite(self):
+        d = np.array([4.0, -2.0, 1.0, -0.5] + [1.0] * 10, np.float32)
+        M = jnp.asarray(np.diag(d))
+        rng = np.random.RandomState(3)
+        b, x0 = _vec(rng.randn(14)), _vec(np.zeros(14))
+        rs = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=2, max_iters=8, tol=1e-8,
+                      fallback=False)
+        # CG truncates at negative curvature and reports the direction
+        assert bool(rs.nc_found)
+        dvec = _unvec(rs.nc_dir)
+        curv = float(dvec @ np.diag(d) @ dvec)
+        np.testing.assert_allclose(curv, float(rs.nc_curv), rtol=1e-3, atol=1e-4)
+        assert curv < 0
+
+
+class TestSStepBiCGStab:
+    """s-step Bi-CG-STAB == standard, SPD + indefinite, s ∈ {1, 2, 4}."""
+
+    @pytest.mark.parametrize("s", [1, 2])
+    def test_matches_standard_on_spd(self, s):
+        M, b, x0 = _spd()
+        xt = np.linalg.solve(np.asarray(M), _unvec(b))
+        rs = sstep_bicgstab(_mat_op(M), b, x0, lam=0.0, s=s, max_iters=40,
+                            tol=1e-8)
+        assert not bool(rs.breakdown)
+        np.testing.assert_allclose(_unvec(rs.x), xt, rtol=1e-4, atol=1e-4)
+        assert int(rs.syncs) <= math.ceil(int(rs.iters) / s) + 1
+
+    def test_s4_converges_with_fallback_guarantee(self):
+        # depth-8 monomial chains exceed f32: the guard may hand the solve
+        # to the standard solver — either way the system must be solved.
+        M, b, x0 = _spd()
+        xt = np.linalg.solve(np.asarray(M), _unvec(b))
+        rs = sstep_bicgstab(_mat_op(M), b, x0, lam=0.0, s=4, max_iters=40,
+                            tol=1e-8)
+        np.testing.assert_allclose(_unvec(rs.x), xt, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("s", [1, 2, 4])
+    def test_indefinite_system(self, s):
+        d = np.array([4.0, -2.0, 1.0, -0.5] + [2.0] * 10, np.float32)
+        M = jnp.asarray(np.diag(d))
+        rng = np.random.RandomState(3)
+        b, x0 = _vec(rng.randn(14)), _vec(np.zeros(14))
+        xt = _unvec(b) / d
+        rs = sstep_bicgstab(_mat_op(M), b, x0, lam=0.0, s=s, max_iters=60,
+                            tol=1e-8)
+        np.testing.assert_allclose(_unvec(rs.x), xt, rtol=1e-3, atol=1e-4)
+        assert bool(rs.nc_found)
+
+    @pytest.mark.parametrize("s", [1, 2])
+    def test_flat_backend_matches_tree(self, s):
+        M, b, x0 = _spd()
+        rt = sstep_bicgstab(_mat_op(M), b, x0, lam=0.0, s=s, max_iters=40,
+                            tol=1e-8)
+        rf = sstep_bicgstab(_mat_op(M), b, x0, lam=0.0, s=s, max_iters=40,
+                            tol=1e-8, backend=_flat_be(b))
+        # same-cycle-or-adjacent convergence (reduction-order fp noise),
+        # same solution — the invariant that matters
+        assert abs(int(rt.iters) - int(rf.iters)) <= s
+        np.testing.assert_allclose(_unvec(rt.x), _unvec(rf.x),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestGramBreakdownFallback:
+    """The conditioning guard fires on a degenerate monomial basis and the
+    standard-solver fallback preserves correctness."""
+
+    def _ill(self):
+        dvals = np.logspace(0, 8, 14).astype(np.float32)
+        rng = np.random.RandomState(2)
+        return (jnp.asarray(np.diag(dvals)), dvals,
+                _vec(rng.randn(14)), _vec(np.zeros(14)))
+
+    @pytest.mark.parametrize("solver", [sstep_cg, sstep_bicgstab])
+    def test_guard_triggers_without_fallback(self, solver):
+        M, dvals, b, x0 = self._ill()
+        rs = solver(_mat_op(M), b, x0, lam=0.0, s=8, max_iters=60, tol=1e-8,
+                    fallback=False)
+        assert bool(rs.breakdown)
+        assert np.isfinite(_unvec(rs.x)).all()
+        # frozen: the broken cycle must not have moved the iterate
+        assert float(rs.residual) > 1.0
+
+    def test_fallback_recovers_cg(self):
+        M, dvals, b, x0 = self._ill()
+        rs = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=8, max_iters=60, tol=1e-8,
+                      fallback=True)
+        rt = cg(_mat_op(M), b, x0, lam=0.0, max_iters=60, tol=1e-8)
+        assert bool(rs.breakdown)
+        # fallback == the standard solve (from the frozen x0 iterate)
+        np.testing.assert_allclose(_unvec(rs.x), _unvec(rt.x),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_well_conditioned_does_not_fall_back(self):
+        M, b, x0 = _spd()
+        rs = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=2, max_iters=40, tol=1e-8)
+        assert not bool(rs.breakdown)
+
+
+class TestHFStepSStep:
+    """hf_step parity across s-step × both vector backends + training."""
+
+    def _setup(self):
+        model = build_mlp((8, 16, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 64, 8, 4)
+        params = model.init(jax.random.PRNGKey(1))
+        return model, data, params
+
+    def _step_out(self, model, data, params, cfg):
+        state = hf_init(params, cfg)
+        step = jax.jit(lambda p, s, cfg=cfg: hf_step(
+            model.loss_fn, p, s, data, data, cfg,
+            model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+        return step(params, state)
+
+    @pytest.mark.parametrize("solver,s", [("bicgstab", 2), ("gn_cg", 2)])
+    def test_backend_parity(self, solver, s):
+        model, data, params = self._setup()
+        out = {}
+        for backend in ("tree", "flat"):
+            cfg = HFConfig(solver=solver, max_cg_iters=8, init_damping=5.0,
+                           krylov_backend=backend, sstep_s=s)
+            out[backend] = self._step_out(model, data, params, cfg)
+        pt, _, mt = out["tree"]
+        pf, _, mf = out["flat"]
+        for a, b in zip(jax.tree_util.tree_leaves(pt),
+                        jax.tree_util.tree_leaves(pf)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+        assert int(mt["krylov_syncs"]) == int(mf["krylov_syncs"])
+        assert int(mt["cg_iters"]) == int(mf["cg_iters"])
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("solver", ["bicgstab", "gn_cg", "hessian_cg",
+                                        "hybrid_cg"])
+    @pytest.mark.parametrize("s", [2, 4])
+    @pytest.mark.parametrize("backend", ["tree", "flat"])
+    def test_full_grid_runs_and_descends(self, solver, s, backend):
+        model, data, params = self._setup()
+        cfg = HFConfig(solver=solver, max_cg_iters=8, init_damping=5.0,
+                       krylov_backend=backend, sstep_s=s)
+        _, _, m = self._step_out(model, data, params, cfg)
+        assert float(m["loss_new"]) < float(m["loss"])
+        assert int(m["krylov_syncs"]) <= int(m["cg_iters"]) + 1
+
+    def test_sstep_syncs_below_standard(self):
+        model, data, params = self._setup()
+        base = HFConfig(solver="bicgstab", max_cg_iters=8, init_damping=5.0)
+        _, _, m_std = self._step_out(model, data, params, base)
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=8, init_damping=5.0,
+                       sstep_s=4)
+        _, _, m_ss = self._step_out(model, data, params, cfg)
+        if not bool(m_ss["sstep_fallback"]):
+            assert int(m_ss["krylov_syncs"]) < int(m_std["krylov_syncs"])
+            assert int(m_ss["krylov_syncs"]) <= math.ceil(
+                int(m_ss["cg_iters"]) / 4) + 1
+
+    def test_sstep_trains(self):
+        model, data, params = self._setup()
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=6, sstep_s=2)
+        state = hf_init(params, cfg)
+        step = jax.jit(lambda p, s: hf_step(
+            model.loss_fn, p, s, data, data, cfg))
+        losses = []
+        for _ in range(6):
+            params, state, m = step(params, state)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.7 * losses[0]
+
+    def test_forced_cg_recurrence_on_bicgstab_solver(self):
+        model, data, params = self._setup()
+        cfg = HFConfig(solver="bicgstab", max_cg_iters=8, init_damping=5.0,
+                       sstep_s=2, sstep_solver="cg")
+        _, _, m = self._step_out(model, data, params, cfg)
+        assert float(m["loss_new"]) < float(m["loss"])
+
+
+class TestConfigValidation:
+    def test_bad_sstep_solver_raises(self):
+        with pytest.raises(ValueError, match="sstep_solver"):
+            HFConfig(sstep_solver="gmres")
+
+    def test_precondition_with_sstep_raises(self):
+        with pytest.raises(ValueError, match="precondition"):
+            HFConfig(sstep_s=2, precondition=True)
+
+    def test_optimizer_threading(self):
+        from repro.configs.base import HFOptConfig
+        from repro.optim import make_optimizer
+        model = build_mlp((8, 12, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 32, 8, 4)
+        params = model.init(jax.random.PRNGKey(1))
+        opt = make_optimizer(
+            HFOptConfig(name="bicgstab", max_cg_iters=4, sstep_s=2),
+            model.loss_fn, model_out_fn=model.logits_fn,
+            out_loss_fn=model.out_loss_fn,
+        )
+        state = opt.init(params)
+        p2, _, m = jax.jit(opt.step)(params, state, data)
+        assert "krylov_syncs" in m
+        assert int(m["krylov_syncs"]) <= int(m["cg_iters"]) + 1
