@@ -1,0 +1,163 @@
+"""Attention-path benchmarks: flash (Pallas) vs `_sdpa` (jnp oracle).
+
+  PYTHONPATH=src python benchmarks/attention_bench.py [--tiny] [--out PATH]
+
+Measures, per sequence length S ∈ {128, 512, 2048} (tiny: {128}):
+
+  * **fwd**      — one causal attention forward,
+  * **fwd_bwd**  — value-and-grad of a scalarized attention (the training
+                   hot loop's per-layer cost: forward + dQ + dK/dV),
+  * **jvp**      — ``jax.jvp`` through attention (the curvature engine's
+                   J·v tangent pass, one application of the cached linear
+                   map per Krylov iteration),
+
+each as wall time (median-of-reps, jitted) and XLA compiled peak temp
+memory (``memory_analysis().temp_size_in_bytes``, same method as
+``curvature_bench.py``). The acceptance row is **fwd_bwd peak memory at the
+largest S**: `_sdpa` materializes the (B, KV, G, S, S) logits in both
+passes (O(S²)); the flash path stores only (o, lse) residuals and
+recomputes P blockwise (O(S·blk)).
+
+Off-TPU the Pallas kernels run in **interpret mode**: wall-clock numbers
+time the interpreter's unrolled per-block HLO and systematically flatter
+the jnp path — they are recorded for completeness, but the honest CPU
+signal is the memory column (EXPERIMENTS.md §Perf pair F; TPU re-measure is
+a ROADMAP item). Results go to ``BENCH_attention.json``; ``--tiny`` is the
+CI smoke mode (smallest shapes, 1 rep, same code paths, same JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.attention import _sdpa, causal_mask
+
+
+def _time_it(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.time() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _temp_bytes(jitted, *args):
+    ma = jitted.lower(*args).compile().memory_analysis()
+    return None if ma is None else int(ma.temp_size_in_bytes)
+
+
+def _paths(S, w):
+    """(name -> (flash_fn, sdpa_fn)) for one sequence length."""
+    flash = lambda q, k, v: ops.flash_attention(q, k, v, causal=True)
+    sdpa = lambda q, k, v: _sdpa(q, k, v, causal_mask(S))
+
+    def scalarize(f):
+        return lambda q, k, v: jnp.sum(f(q, k, v) * w)
+
+    def paths_for(f):
+        return {
+            "fwd": lambda q, k, v: f(q, k, v),
+            "fwd_bwd": jax.grad(scalarize(f), argnums=(0, 1, 2)),
+            "jvp": lambda q, k, v, qt, kt, vt: jax.jvp(
+                f, (q, k, v), (qt, kt, vt))[1],
+        }
+
+    return paths_for(flash), paths_for(sdpa)
+
+
+def run_bench(tiny: bool = False, out_path: str = "BENCH_attention.json",
+              log=print):
+    if tiny:
+        seqs, B, H, KV, hd, reps = [128], 1, 2, 1, 32, 1
+    else:
+        seqs, B, H, KV, hd, reps = [128, 512, 2048], 1, 2, 1, 64, 3
+
+    log(f"attention bench: B={B} H={H} KV={KV} hd={hd} S={seqs}"
+        f"{' [tiny]' if tiny else ''}")
+    rows = []
+    for S in seqs:
+        ks = jax.random.split(jax.random.PRNGKey(0), 7)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+        w = jax.random.normal(ks[3], (B, S, H, hd), jnp.float32)
+        qt = jax.random.normal(ks[4], (B, S, H, hd), jnp.float32)
+        kt = jax.random.normal(ks[5], (B, S, KV, hd), jnp.float32)
+        vt = jax.random.normal(ks[6], (B, S, KV, hd), jnp.float32)
+        flash_paths, sdpa_paths = _paths(S, w)
+        for impl, paths in (("flash", flash_paths), ("sdpa", sdpa_paths)):
+            for name, fn in paths.items():
+                args = (q, k, v, qt, kt, vt) if name == "jvp" else (q, k, v)
+                jitted = jax.jit(fn)
+                t = _time_it(jitted, *args, reps=reps)
+                mem = _temp_bytes(jitted, *args)
+                rows.append({"S": S, "path": name, "impl": impl,
+                             "wall_s": round(t, 5), "temp_bytes": mem})
+                log(f"  S={S:5d} {name:7s} {impl:5s} {t * 1e3:9.2f} ms  "
+                    f"temp={mem if mem is not None else '?'} B")
+
+    def temp(S, path, impl):
+        for r in rows:
+            if (r["S"], r["path"], r["impl"]) == (S, path, impl):
+                return r["temp_bytes"]
+        return None
+
+    S_max = max(seqs)
+    summary = {"S_max": S_max, "mem_ok": None, "mem_ratio": {}}
+    for name in ("fwd", "fwd_bwd", "jvp"):
+        tf, ts = temp(S_max, name, "flash"), temp(S_max, name, "sdpa")
+        if tf is not None and ts is not None:
+            summary["mem_ratio"][name] = round(ts / max(tf, 1), 2)
+    if summary["mem_ratio"].get("fwd_bwd") is not None:
+        # acceptance: flash fwd+bwd beats _sdpa peak temp at the largest S
+        summary["mem_ok"] = bool(summary["mem_ratio"]["fwd_bwd"] > 1.0)
+    log(f"  mem ratios (sdpa/flash) at S={S_max}: {summary['mem_ratio']} "
+        f"ok={summary['mem_ok']}")
+
+    result = {
+        "config": {"B": B, "H": H, "KV": KV, "hd": hd, "seqs": seqs,
+                   "reps": reps, "tiny": tiny,
+                   "backend": jax.default_backend(),
+                   "interpret": jax.default_backend() != "tpu"},
+        "rows": rows,
+        "summary": summary,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    log(f"wrote {out_path}")
+    return result
+
+
+def run(log=print):
+    """benchmarks.run integration: CSV rows from a tiny pass (no JSON)."""
+    res = run_bench(tiny=True, out_path=os.devnull, log=lambda *a: None)
+    rows = []
+    for r in res["rows"]:
+        rows.append((f"attention/{r['path']}_{r['impl']}_S{r['S']}",
+                     r["wall_s"] * 1e6,
+                     f"temp_bytes={r['temp_bytes']}"))
+    s = res["summary"]
+    rows.append(("attention/mem_ratio_fwd_bwd", 0.0,
+                 f"ratio={s['mem_ratio'].get('fwd_bwd')} ok={s['mem_ok']}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: smallest shapes, 1 rep, same code paths")
+    ap.add_argument("--out", default="BENCH_attention.json")
+    args = ap.parse_args()
+    run_bench(tiny=args.tiny, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

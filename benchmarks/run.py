@@ -14,17 +14,19 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,kernels,"
-                         "curvature,sstep,roofline")
+                         "attention,curvature,sstep,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig3_variants, fig4_batchsize, fig5_scaling, kernels_bench,
-                   curvature_bench, roofline_table, sstep_bench)
+                   attention_bench, curvature_bench, roofline_table,
+                   sstep_bench)
     suites = {
         "fig3": fig3_variants.run,
         "fig4": fig4_batchsize.run,
         "fig5": fig5_scaling.run,
         "kernels": kernels_bench.run,
+        "attention": attention_bench.run,
         "curvature": curvature_bench.run,
         "sstep": sstep_bench.run,
         "roofline": roofline_table.run,

@@ -60,10 +60,15 @@ class ModelConfig:
     # intermediates (keeps the one-hot dispatch tensors token-sharded instead
     # of letting GSPMD replicate them — §Perf pair A). No-op without a mesh.
     shard_hints: bool = False
-    # Use the Pallas flash-attention kernel on the prefill/serving path
-    # (training keeps the jnp path: the kernel is forward-only — a backward
-    # kernel is TPU-deployment work, noted in DESIGN.md). Requires seq_len
-    # divisible by the kernel block (128); falls back to jnp otherwise.
+    # Use the Pallas flash-attention kernels on BOTH the serving and the
+    # training path (attend_full / encoder_attend / attend_full_with_cache).
+    # Fully differentiable: forward emits the logsumexp residual, reverse
+    # mode runs the Pallas dQ and dK/dV kernels, forward mode (the curvature
+    # engine's J·v) runs the Pallas JVP pass, and exact-Hessian
+    # forward-over-reverse traces use an AD-closed chunked-jnp form (see
+    # kernels/flash_ad.py + EXPERIMENTS.md §Perf pair F). Non-block-aligned
+    # seq_len is padded to the 128 tile, tail-masked and sliced. Explicit
+    # masks and cross-attention keep the jnp `_sdpa` fallback/oracle.
     use_flash_attention: bool = False
     dtype: str = "float32"
     norm_eps: float = 1e-5

@@ -43,6 +43,19 @@ Chunking assumes the loss/outputs decompose independently over the leading
 batch axis with mean semantics (true for every model in this repo; the MoE
 aux loss is per-chunk-mean approximated, same as any microbatching scheme).
 
+Flash attention: exact-Hessian operators are forward-over-reverse
+(jvp-of-grad), an order the Pallas flash kernels' first-order custom-AD
+rules cannot be differentiated through. Every exact-Hessian build here is
+therefore bracketed in ``kernels.flash_ad.second_order_tangents()``, under
+which flash-attention models trace an AD-closed chunked-jnp attention (same
+O(S·blk) memory, no (S, S) logits) — see kernels/flash_ad.py. The GN
+product is first-order (linearize + linear_transpose) and runs the Pallas
+JVP/backward kernels directly, no context needed — except under the s-step
+block products, where hf_step brackets the GN *build* (vmap over the flash
+linear map needs the AD-closed form); ``make_gnvp_op`` captures that
+context state at build time and re-enters it around the lazy per-call
+traces of its "naive"/"chunked" modes so the bracket holds for them too.
+
 Sharding story:
   * **pjit/GSPMD** (implicit collectives, ``grad_reduce=None``): batch
     leaves sharded over ("pod","data"); the scan slices the *leading* axis,
@@ -58,10 +71,13 @@ Sharding story:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..kernels.flash_ad import second_order_active, second_order_tangents
 
 LossFn = Callable[[Any, Any], jax.Array]      # (params, batch) -> scalar mean
 OutFn = Callable[[Any, Any], Any]             # (params, batch) -> network output z
@@ -177,7 +193,11 @@ def make_hvp_op(
 
         def hvp(v):
             vc = _cast_like(v, params)
-            return _maybe_reduce(jax.jvp(grad_fn, (params,), (vc,))[1], grad_reduce)
+            # jvp-of-grad is forward-over-reverse: flash attention (if the
+            # model uses it) must trace its AD-closed tangent rule here.
+            with second_order_tangents():
+                out = jax.jvp(grad_fn, (params,), (vc,))[1]
+            return _maybe_reduce(out, grad_reduce)
 
         return hvp
 
@@ -185,7 +205,12 @@ def make_hvp_op(
         scalar = chunked_scalar_fn(loss_fn, batch, chunk_size, remat=remat)
     else:
         scalar = lambda p: loss_fn(p, batch)
-    _, lin = jax.linearize(jax.grad(scalar), params)
+    # Forward-over-reverse: the cached linear map is the jvp of the whole
+    # grad trace (forward + transposed tangent). Flash-attention models must
+    # trace their AD-closed second-order tangent rule here — the Pallas
+    # first-order rules cannot be forward-differentiated (kernels/flash_ad).
+    with second_order_tangents():
+        _, lin = jax.linearize(jax.grad(scalar), params)
 
     def hvp(v):
         return _maybe_reduce(lin(_cast_like(v, params)), grad_reduce)
@@ -215,9 +240,14 @@ def shared_primal_hvp(
     schedule as ``make_hvp_op``); f0 needs no explicit reduce — under the
     shard_map wrapper the loss is already pmean'd in the forward pass.
     """
-    (f0, g), lin = jax.linearize(
-        lambda p: jax.value_and_grad(loss_fn)(p, batch), params
-    )
+    # Forward-over-reverse (see make_hvp_op): flash-attention models trace
+    # their AD-closed tangent rule; the shared-primal gradient consequently
+    # uses the chunked-jnp attention backward rather than the Pallas one —
+    # the price of fusing g with the Hessian map into one trace.
+    with second_order_tangents():
+        (f0, g), lin = jax.linearize(
+            lambda p: jax.value_and_grad(loss_fn)(p, batch), params
+        )
 
     def hvp(v):
         return _maybe_reduce(lin(_cast_like(v, params))[1], grad_reduce)
@@ -285,15 +315,23 @@ def make_gnvp_op(
     path: the chunked GN product recomputes each chunk's primal in-call
     already (the scan frees one chunk's intermediates before the next), so
     its memory is flat with or without checkpointing.
+
+    The ``second_order_tangents()`` state is captured at BUILD time and
+    re-entered around every lazy trace: the "naive" and "chunked" products
+    re-trace the model per application, which would otherwise escape a
+    context the caller held only around the builder (hf_step brackets the
+    GN build when ``sstep_s > 1`` so the block products can vmap the flash
+    path).
     """
     _check_mode(mode)
+    ctx = (second_order_tangents if second_order_active()
+           else contextlib.nullcontext)
     if mode == "naive":
         def gnvp(v):
             vc = _cast_like(v, params)
-            return _maybe_reduce(
-                _gnvp_direct(model_out_fn, out_loss_fn, params, vc, batch),
-                grad_reduce,
-            )
+            with ctx():
+                out = _gnvp_direct(model_out_fn, out_loss_fn, params, vc, batch)
+            return _maybe_reduce(out, grad_reduce)
 
         return gnvp
 
@@ -322,12 +360,13 @@ def make_gnvp_op(
             )
             return acc, None
 
-        acc, _ = jax.lax.scan(scan_body, acc0, main)
-        if rem is not None:
-            gv = _gnvp_direct(model_out_fn, out_loss_fn, params, vc, rem)
-            acc = jax.tree_util.tree_map(
-                lambda a, g: a + n_rem * g.astype(jnp.float32), acc, gv
-            )
+        with ctx():
+            acc, _ = jax.lax.scan(scan_body, acc0, main)
+            if rem is not None:
+                gv = _gnvp_direct(model_out_fn, out_loss_fn, params, vc, rem)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + n_rem * g.astype(jnp.float32), acc, gv
+                )
         out = jax.tree_util.tree_map(
             lambda a, p: (a / B).astype(p.dtype), acc, params
         )

@@ -57,6 +57,7 @@ from .curvature import (
     make_hvp_op,
     shared_primal_hvp,
 )
+from ..kernels.flash_ad import second_order_tangents
 from .krylov import BACKENDS, get_backend
 from .line_search import armijo
 from .solvers import bicgstab, cg, hutchinson_diag, pcg, sign_correct
@@ -252,7 +253,19 @@ def hf_step(
         if config.solver != "gn_cg":
             exact = make_hvp_op(loss_fn, params, hvp_batch, **curv_kw)
     if needs_gn:
-        gn = make_gnvp_op(model_out_fn, out_loss_fn, params, hvp_batch, **curv_kw)
+        if config.sstep_s > 1:
+            # The s-step solve lifts its operator to stacked multi-tangent
+            # blocks via jax.vmap (core/blocks.py). The flash-attention
+            # first-order GN tangent (linear_call) has no batching rule, so
+            # build the GN operator under the AD-closed second-order rules —
+            # plain jnp, vmappable, same math; a no-op for models that don't
+            # use flash attention (kernels/flash_ad.py).
+            with second_order_tangents():
+                gn = make_gnvp_op(model_out_fn, out_loss_fn, params,
+                                  hvp_batch, **curv_kw)
+        else:
+            gn = make_gnvp_op(model_out_fn, out_loss_fn, params, hvp_batch,
+                              **curv_kw)
     if config.solver == "gn_cg":
         G = gn
     elif config.solver in ("hessian_cg", "bicgstab"):

@@ -1,0 +1,252 @@
+"""Differentiable flash attention: the AD closure over the Pallas kernels.
+
+``flash_mha`` is the training-path entry point (models/attention.py routes
+``attend_full`` / ``encoder_attend`` here under ``cfg.use_flash_attention``).
+It must compose with every transform the HF optimizer applies to the loss:
+
+  * ``jax.value_and_grad``         — the outer-step gradient (Alg. 2 line 3),
+  * ``jax.linearize`` + ``jax.linear_transpose`` — the curvature engine's
+    Gauss-Newton product (J·v / Jᵀ·u, core/curvature.py::_gnvp_once),
+  * ``jax.linearize(jax.grad(f))`` — the exact-Hessian product
+    (forward-over-reverse, every ``curvature_mode``),
+  * plain evaluation — the Armijo line search and serving prefill.
+
+**First-order structure.** ``flash_mha`` is a ``jax.custom_jvp`` function
+whose tangent rule is an extra flash pass with the saved logsumexp: the
+Pallas JVP kernel computes ȯ = Σ_j P_ij(Ṡ_ij v_j + v̇_j) − t ∘ o blockwise,
+and it is wired through ``jax.custom_derivatives.linear_call`` so that
+*transposing* the tangent (what ``jax.grad`` and ``jax.linear_transpose``
+do) lands on the Pallas backward kernels (dQ pass + dK/dV pass). Reverse
+mode therefore saves only (q, k, v, o, lse) — O(S) residuals instead of the
+O(S²) logits ``_sdpa`` materializes — and the gradient, the line search and
+the whole Gauss-Newton Krylov loop run on Pallas kernels.
+
+**Second-order structure.** Exact-Hessian products are forward-over-reverse:
+``jax.linearize(jax.grad(loss))`` must forward-differentiate the *transposed*
+tangent computation. No custom-transpose mechanism survives that —
+``linear_call`` has no JVP rule, ``custom_vjp`` forbids forward mode
+outright, and a scan emitted from inside a custom_jvp rule never acquires
+the linearity annotations ``lax.scan``'s transpose rule requires (scan
+transposition only works on scans that went through scan's *own* jvp rule).
+Pallas closure at second order would mean flash double-backward kernels.
+Instead, the curvature engine brackets its exact-Hessian operator builds in
+``second_order_tangents()``; under that context the entry point swaps the
+kernel for ``_chunked_attention`` — a plain-jnp attention chunked over
+*query blocks* (a ``jax.checkpoint``-ed ``lax.scan``; K/V are broadcast
+consts, per-block outputs are stacked ys, there is no sequence-sized carry).
+Being ordinary jnp, JAX derives its gradient, its JVP, and the JVP of its
+gradient by standard rules, and remat keeps every direction at O(S·blk)
+memory — the (S, S) logits are never materialized, which is exactly what
+the Krylov inner loop pays K times per outer step. The routing cannot be
+inferred from trace state (``lax.scan``'s jvp rule re-traces bodies with
+fresh tracers, hiding any outer transform), so it is explicit and
+trace-time: the flag is read when the loss is *traced*, which is when the
+engine builds its operators. Misrouting fails loudly: the first-order
+entry's nested-forward rule raises with a pointer to the context manager.
+
+Non-block-aligned sequences are padded to the 128-lane tile with the key
+tail masked via ``valid_len`` and the output sliced back — the pad/slice is
+ordinary jnp, so it is transparent to all of the above; padded query rows
+are discarded by the slice and their tangents/cotangents are exact zeros.
+
+One more routing consequence: ``jax.vmap`` over a cached linear map
+containing the first-order tangent (core/blocks.py's s-step block
+products) has no batching rule for ``linear_call``, so ``hf_step`` builds
+the Gauss-Newton operator under ``second_order_tangents()`` whenever
+``sstep_s > 1`` — the AD-closed form is plain jnp and vmaps fine (a no-op
+for non-flash models). Exact-Hessian s-step operators are already built
+under the context by the curvature engine.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as fa
+
+NEG_INF = -1e30
+
+_SECOND_ORDER_DEPTH = 0
+
+
+@contextlib.contextmanager
+def second_order_tangents():
+    """Trace-time context: flash attention swaps its Pallas custom-AD rules
+    for the AD-closed chunked-jnp form, so the traced computation supports
+    forward-over-reverse (exact-Hessian products). Wrap the *trace* that
+    builds the operator — core/curvature.py does this for every
+    exact-Hessian mode."""
+    global _SECOND_ORDER_DEPTH
+    _SECOND_ORDER_DEPTH += 1
+    try:
+        yield
+    finally:
+        _SECOND_ORDER_DEPTH -= 1
+
+
+def second_order_active() -> bool:
+    return _SECOND_ORDER_DEPTH > 0
+
+
+# --------------------------------------------------- shared AD-pass impls --
+def flash_bwd_passes(q, k, v, o, lse, do, **kkw):
+    """The attention VJP from the stored lse: Δ precompute, the Pallas dQ
+    pass, the Pallas dK/dV pass, and the GQA group-sum (f32 partials).
+    The single implementation behind both the linear_call transpose (what
+    jax.grad executes) and the public ops.flash_attention_bwd wrapper the
+    kernel tests pin — one copy, no drift."""
+    delta = jnp.einsum("bshd,bshd->bsh", o.astype(jnp.float32),
+                       do.astype(jnp.float32)).transpose(0, 2, 1)
+    dq = fa.flash_attention_dq(q, k, v, do, lse, delta, **kkw)
+    dkh, dvh = fa.flash_attention_dkv(q, k, v, do, lse, delta, **kkw)
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    dk = dkh.reshape(B, S, KV, G, hd).sum(3)
+    dv = dvh.reshape(B, S, KV, G, hd).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def flash_jvp_pass(q, k, v, o, lse, qt, kt, vt, **kkw):
+    """The attention JVP from the stored lse: the Pallas tangent pass plus
+    the ȯ = g − t ∘ o finish (and l̇se = t). Single implementation behind
+    the linear_call tangent and ops.flash_attention_jvp."""
+    g, t = fa.flash_attention_jvp(q, k, v, qt, kt, vt, lse, **kkw)
+    ot = g - t.transpose(0, 2, 1)[..., None] * o.astype(jnp.float32)
+    return ot.astype(o.dtype), t
+
+
+# ----------------------------------------------- second-order (jnp) entry --
+def _chunked_attention(q, k, v, *, causal, window, scale, valid_len, blk):
+    """Attention as a checkpointed scan over query blocks — the AD-closed
+    form the exact-Hessian engine traces through.
+
+    Each step computes softmax(q_blk Kᵀ)V for one (blk, S) tile: peak
+    memory O(S·blk), never the (S, S) logits. K/V enter as (nonlinear)
+    scan consts and the per-block outputs are stacked ys, so ``lax.scan``'s
+    jvp rule gives the tangent scan correct linearity annotations — the
+    structure every further transform (transpose, jvp-of-transpose)
+    composes with by construction. ``jax.checkpoint`` on the body keeps the
+    same O(S·blk) bound for all of them (P tiles are recomputed, not
+    stored).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    blk = min(blk, S)
+    nb = S // blk
+    f32 = jnp.float32
+    qs = q.reshape(B, nb, blk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, x):
+        qb, i0 = x                                  # qb: (B, blk, KV, G, hd)
+        s = jnp.einsum("bskgh,btkh->bkgst", qb, k,
+                       preferred_element_type=f32) * scale
+        mask = fa.position_mask(i0 + jnp.arange(blk)[:, None],
+                                jnp.arange(S)[None, :], causal=causal,
+                                window=window, valid_len=valid_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+        p = jnp.where(mask[None, None, None], jnp.exp(s - m_safe), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        ob = jnp.einsum("bkgst,btkh->bskgh", p / jnp.where(l <= 0.0, 1.0, l),
+                        v, preferred_element_type=f32)
+        return None, ob.reshape(B, blk, H, hd).astype(q.dtype)
+
+    _, ys = jax.lax.scan(jax.checkpoint(body), None,
+                         (qs, jnp.arange(nb) * blk))
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+# -------------------------------------------------------- per-config entry --
+@functools.lru_cache(maxsize=None)
+def _fa_entry(causal, window, scale, blk_q, blk_k, interpret, valid_len,
+              second_order):
+    """Build (and cache) the differentiable attention callable for one
+    static configuration. ``second_order`` is part of the cache key on
+    purpose: the two rule sets must be distinct function objects so no
+    jit/trace cache can alias them across contexts."""
+    kkw = dict(causal=causal, window=window, valid_len=valid_len,
+               scale=scale, blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+
+    if second_order:
+        return functools.partial(
+            _chunked_attention, causal=causal, window=window, scale=scale,
+            valid_len=valid_len, blk=blk_k)
+
+    @jax.custom_jvp
+    def fwd_res(q, k, v):
+        return fa.flash_attention_fwd(q, k, v, **kkw)
+
+    @fwd_res.defjvp
+    def fwd_res_jvp(primals, tangents):
+        # Fires only when the primal forward is itself forward-differentiated
+        # — i.e. forward-over-reverse reached the first-order entry. The
+        # Pallas kernels cannot close that order; fail with the remedy.
+        raise NotImplementedError(
+            "flash attention: exact-Hessian (forward-over-reverse) traces "
+            "must be built under kernels.ops.second_order_tangents() — the "
+            "curvature engine does this; wrap any hand-rolled "
+            "jvp-of-grad the same way.")
+
+    def _tan(res, lin):
+        # JVP flash pass (Pallas): linear in (q̇, k̇, v̇) given residuals.
+        return flash_jvp_pass(*res, *lin, **kkw)[0]
+
+    def _tan_transpose(res, ct):
+        # Transpose of _tan == the attention VJP: Pallas dQ + dK/dV passes
+        # (this is what jax.grad / jax.linear_transpose execute).
+        return flash_bwd_passes(*res, ct, **kkw)
+
+    @jax.custom_jvp
+    def fa_o(q, k, v):
+        return fwd_res(q, k, v)[0]
+
+    @fa_o.defjvp
+    def fa_o_jvp(primals, tangents):
+        q, k, v = primals
+        o, lse = fwd_res(q, k, v)
+        ot = jax.custom_derivatives.linear_call(
+            _tan, _tan_transpose, (q, k, v, o, lse), tuple(tangents))
+        return o, ot
+
+    return jax.jit(fa_o)
+
+
+# ------------------------------------------------------------ public entry --
+def flash_mha(q, k, v, *, causal=True, window=None, scale=None,
+              blk_q=128, blk_k=128, interpret=False):
+    """Differentiable flash attention with pad-and-mask block alignment.
+
+    q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd). When S is not a multiple
+    of the kernel block, inputs are zero-padded to the next 128 multiple,
+    the padded key tail is masked inside the kernels (``valid_len``) and the
+    output is sliced back. The rule set (Pallas first-order vs AD-closed
+    chunked-jnp) is picked by ``second_order_tangents()`` at trace time; see
+    module docstring.
+    """
+    B, S, H, hd = q.shape
+    if k.shape[1] != S:
+        raise ValueError(
+            f"flash_mha requires matching q/kv lengths, got {S} vs "
+            f"{k.shape[1]} (cross-attention stays on the jnp path)")
+    scale = float(scale if scale is not None else 1.0 / (hd ** 0.5))
+    # Strict 128-tile contract: any S that is not a 128 multiple is padded
+    # (including S < 128) — sub-128 blocks would hand the TPU lane dimension
+    # non-aligned logits/LSE tiles. 128-multiple S runs unpadded with the
+    # caller's block sizes.
+    if S % 128 == 0:
+        Sp, valid_len = S, None
+    else:
+        Sp, valid_len = -(-S // 128) * 128, S
+    entry = _fa_entry(causal, window, scale, blk_q, blk_k, bool(interpret),
+                      valid_len, second_order_active())
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    o = entry(q, k, v)
+    return o[:, :S] if Sp != S else o

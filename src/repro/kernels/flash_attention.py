@@ -1,15 +1,39 @@
-"""Flash attention (prefill/training forward) as a Pallas TPU kernel.
+"""Flash attention (forward + backward + JVP) as Pallas TPU kernels.
 
-Online-softmax blockwise attention: grid (batch, q_heads, q_blocks,
-k_blocks); running max/sum and the output accumulator live in VMEM scratch
-and persist across the innermost (k_blocks) grid dimension. Causal and
-sliding-window masks are applied inside the block; fully-masked key blocks
-contribute nothing (the m/l recurrence is a no-op for -inf rows).
+Online-softmax blockwise attention: every kernel runs on a 4-D grid whose
+innermost dimension is the reduction axis and keeps its accumulators in VMEM
+scratch across that axis. Causal and sliding-window masks are applied inside
+the block; fully-masked key blocks contribute nothing (the m/l recurrence is
+a no-op for -inf rows). GQA is handled in the index maps (kv head =
+q head // group). ``valid_len`` masks a zero-padded key tail so
+non-block-aligned sequences can be padded to the 128 lane tile and sliced
+(see kernels.flash_ad.flash_mha).
+
+Kernels (S = q length == kv length, hd = head dim):
+
+  * ``_fa_kernel``      — forward; emits O and the per-row logsumexp
+                          LSE_i = m_i + log l_i, the residual every other
+                          kernel uses to recompute P = exp(S·scale − LSE)
+                          blockwise instead of storing the (S, S) weights.
+  * ``_fa_dq_kernel``   — backward dQ pass: grid (B, H, q_blocks, k_blocks),
+                          dQ_i = scale · Σ_j P_ij (dP_ij − Δ_i) K_j with
+                          dP = dO Vᵀ and Δ = rowsum(dO ∘ O) precomputed.
+  * ``_fa_dkv_kernel``  — backward dK/dV pass: grid (B, H, k_blocks,
+                          q_blocks) (reduction over q blocks), emitting
+                          per-q-head dK/dV; the GQA group-sum happens in the
+                          caller (kernels.ops.flash_attention_bwd).
+  * ``_fa_jvp_kernel``  — forward-mode tangent pass: with Ṡ = scale·(Q̇Kᵀ +
+                          QK̇ᵀ), accumulates G_i = Σ_j P_ij (Ṡ_ij V_j + V̇_j)
+                          and t_i = Σ_j P_ij Ṡ_ij; the caller finishes
+                          Ȯ = G − t ∘ O (and L̇SE = t). This is the extra
+                          flash pass that makes the kernel usable under
+                          ``jax.linearize`` (the curvature engine's J·v).
 
 BlockSpecs stage (blk_q x hd) query tiles and (blk_k x hd) key/value tiles
 into VMEM; the MXU sees (blk_q x hd) @ (hd x blk_k) matmuls with
-hardware-aligned tiles (blk_* multiples of 128 for f32/bf16). GQA is handled
-in the index maps (kv head = q head // group).
+hardware-aligned tiles (blk_* multiples of 128 for f32/bf16). LSE/Δ ride in
+(B, H, S) layout with (1, 1, blk_q) blocks, the same layout the stock JAX
+flash kernels use for their l/m residuals.
 """
 from __future__ import annotations
 
@@ -23,8 +47,33 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-               scale, causal, window, blk_q, blk_k, n_k_blocks):
+def position_mask(q_pos, k_pos, *, causal, window, valid_len):
+    """Broadcasted attention mask from query/key position arrays — the ONE
+    definition of the causal/sliding-window/valid-length semantics, shared
+    by every Pallas kernel here and by the chunked-jnp second-order route
+    (kernels/flash_ad.py), so the two routes cannot drift. The pure-jnp
+    oracle (kernels/ref.py) keeps an independent copy on purpose: it is the
+    ground truth these semantics are tested against."""
+    mask = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        mask = jnp.logical_and(mask, k_pos <= q_pos)
+    if window is not None:
+        mask = jnp.logical_and(mask, k_pos > q_pos - window)
+    if valid_len is not None:
+        mask = jnp.logical_and(mask, k_pos < valid_len)
+    return mask
+
+
+def _block_mask(qi, ki, blk_q, blk_k, *, causal, window, valid_len):
+    """(blk_q, blk_k) boolean mask for the (qi, ki) grid cell."""
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    return position_mask(q_pos, k_pos, causal=causal, window=window,
+                         valid_len=valid_len)
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+               scale, causal, window, valid_len, blk_q, blk_k, n_k_blocks):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -41,13 +90,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                               # (blk_q, blk_k)
 
-    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
-    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
-    mask = jnp.ones((blk_q, blk_k), bool)
-    if causal:
-        mask = jnp.logical_and(mask, k_pos <= q_pos)
-    if window is not None:
-        mask = jnp.logical_and(mask, k_pos > q_pos - window)
+    mask = _block_mask(qi, ki, blk_q, blk_k, causal=causal, window=window,
+                       valid_len=valid_len)
     logits = jnp.where(mask, logits, NEG_INF)
 
     m_prev = m_scr[...]                                     # (blk_q, 1)
@@ -71,35 +115,181 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _finish():
         norm = jnp.where(l_new <= 0.0, 1.0, l_new)
         o_ref[0, :, 0, :] = (acc / norm).astype(o_ref.dtype)
+        # per-row logsumexp residual; fully-masked rows get lse = 0 and the
+        # downstream kernels mask their P entries explicitly anyway.
+        m_fin = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        lse_ref[0, 0, :] = (m_fin + jnp.log(norm))[:, 0]
 
 
-def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
-                    blk_q=128, blk_k=128, interpret=False):
-    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+def _recompute_p(q, k, lse, qi, ki, *, scale, causal, window, valid_len,
+                 blk_q, blk_k):
+    """P block from the stored LSE: P_ij = exp(scale·q_i·k_j − lse_i)."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    mask = _block_mask(qi, ki, blk_q, blk_k, causal=causal, window=window,
+                       valid_len=valid_len)
+    return jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0), mask
+
+
+def _fa_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                  acc_scr, *, scale, causal, window, valid_len, blk_q, blk_k,
+                  n_k_blocks):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]
+    k = k_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :]
+    do = do_ref[0, :, 0, :]
+    lse = lse_ref[0, 0, :]
+    delta = delta_ref[0, 0, :]
+
+    p, _ = _recompute_p(q, k, lse, qi, ki, scale=scale, causal=causal,
+                        window=window, valid_len=valid_len,
+                        blk_q=blk_q, blk_k=blk_k)
+    dp = jax.lax.dot_general(                               # dO @ Vᵀ
+        do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    ds = p * (dp - delta[:, None])                          # (blk_q, blk_k)
+    acc_scr[...] += jax.lax.dot_general(                    # dS @ K
+        ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        dq_ref[0, :, 0, :] = (acc_scr[...] * scale).astype(dq_ref.dtype)
+
+
+def _fa_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, window,
+                   valid_len, blk_q, blk_k, n_q_blocks):
+    # grid (B, H, k_blocks, q_blocks): reduction over q blocks (innermost)
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, :, 0, :]
+    k = k_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :]
+    do = do_ref[0, :, 0, :]
+    lse = lse_ref[0, 0, :]
+    delta = delta_ref[0, 0, :]
+
+    p, _ = _recompute_p(q, k, lse, qi, ki, scale=scale, causal=causal,
+                        window=window, valid_len=valid_len,
+                        blk_q=blk_q, blk_k=blk_k)
+    dv_scr[...] += jax.lax.dot_general(                     # Pᵀ @ dO
+        p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    ds = p * (dp - delta[:, None])
+    dk_scr[...] += jax.lax.dot_general(                     # dSᵀ @ Q
+        ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(qi == n_q_blocks - 1)
+    def _finish():
+        dk_ref[0, :, 0, :] = (dk_scr[...] * scale).astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _fa_jvp_kernel(q_ref, k_ref, v_ref, qt_ref, kt_ref, vt_ref, lse_ref,
+                   g_ref, t_ref, g_scr, t_scr, *, scale, causal, window,
+                   valid_len, blk_q, blk_k, n_k_blocks):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        g_scr[...] = jnp.zeros_like(g_scr)
+        t_scr[...] = jnp.zeros_like(t_scr)
+
+    q = q_ref[0, :, 0, :]
+    k = k_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :]
+    qt = qt_ref[0, :, 0, :]
+    kt = kt_ref[0, :, 0, :]
+    vt = vt_ref[0, :, 0, :]
+    lse = lse_ref[0, 0, :]
+
+    p, mask = _recompute_p(q, k, lse, qi, ki, scale=scale, causal=causal,
+                           window=window, valid_len=valid_len,
+                           blk_q=blk_q, blk_k=blk_k)
+    st = (jax.lax.dot_general(                              # Q̇ Kᵀ + Q K̇ᵀ
+        qt, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) + jax.lax.dot_general(
+        q, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )) * scale
+    r = p * jnp.where(mask, st, 0.0)                        # P ∘ Ṡ
+    g_scr[...] += jax.lax.dot_general(
+        r.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + jax.lax.dot_general(
+        p.astype(vt.dtype), vt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    t_scr[...] += jnp.sum(r, axis=1, keepdims=True)
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        g_ref[0, :, 0, :] = g_scr[...].astype(g_ref.dtype)
+        t_ref[0, 0, :] = t_scr[:, 0]
+
+
+# --------------------------------------------------------------- wrappers --
+def _shapes(q, k, blk_q, blk_k):
     B, S, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
-    scale = float(scale if scale is not None else 1.0 / (hd ** 0.5))
     blk_q = min(blk_q, S)
     blk_k = min(blk_k, S)
     assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
-    nq, nk = S // blk_q, S // blk_k
-    grid = (B, H, nq, nk)
+    return B, S, H, hd, KV, G, blk_q, blk_k, S // blk_q, S // blk_k
 
+
+def _resolve_scale(scale, hd):
+    return float(scale if scale is not None else 1.0 / (hd ** 0.5))
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, valid_len=None,
+                        scale=None, blk_q=128, blk_k=128, interpret=False):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (o: (B,S,H,hd), lse: (B,H,S))."""
+    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+    scale = _resolve_scale(scale, hd)
     kernel = functools.partial(
         _fa_kernel, scale=scale, causal=causal, window=window,
-        blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
+        valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
     )
     return pl.pallas_call(
         kernel,
-        grid=grid,
+        grid=(B, H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
             pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
             pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
         ],
-        out_specs=pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=(
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ),
         scratch_shapes=[
             pltpu.VMEM((blk_q, 1), jnp.float32),
             pltpu.VMEM((blk_q, 1), jnp.float32),
@@ -107,3 +297,120 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, valid_len=None,
+                    scale=None, blk_q=128, blk_k=128, interpret=False):
+    """Forward only (serving path): q (B,S,H,hd), k/v (B,S,KV,hd) -> o."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, valid_len=valid_len,
+        scale=scale, blk_q=blk_q, blk_k=blk_k, interpret=interpret,
+    )[0]
+
+
+def flash_attention_dq(q, k, v, do, lse, delta, *, causal=True, window=None,
+                       valid_len=None, scale=None, blk_q=128, blk_k=128,
+                       interpret=False):
+    """Backward dQ pass. lse/delta: (B,H,S). Returns dq (B,S,H,hd)."""
+    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+    scale = _resolve_scale(scale, hd)
+    kernel = functools.partial(
+        _fa_dq_kernel, scale=scale, causal=causal, window=window,
+        valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+def flash_attention_dkv(q, k, v, do, lse, delta, *, causal=True, window=None,
+                        valid_len=None, scale=None, blk_q=128, blk_k=128,
+                        interpret=False):
+    """Backward dK/dV pass, per *query* head (the caller sums each GQA
+    group). Returns (dk_h, dv_h): (B,S,H,hd)."""
+    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+    scale = _resolve_scale(scale, hd)
+    kernel = functools.partial(
+        _fa_dkv_kernel, scale=scale, causal=causal, window=window,
+        valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_q_blocks=nq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, j, i: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, j, i: (b, i, h, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, j, i: (b, h, i)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, j, i: (b, h, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h, 0)),
+        ),
+        out_shape=(
+            # per-q-head partials stay f32 so the GQA group-sum outside the
+            # kernel accumulates at full precision even for bf16 models
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((blk_k, hd), jnp.float32),
+            pltpu.VMEM((blk_k, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+def flash_attention_jvp(q, k, v, qt, kt, vt, lse, *, causal=True, window=None,
+                        valid_len=None, scale=None, blk_q=128, blk_k=128,
+                        interpret=False):
+    """Tangent pass: returns (g: (B,S,H,hd), t: (B,H,S)) with
+    g_i = Σ_j P_ij (Ṡ_ij v_j + v̇_j) and t_i = Σ_j P_ij Ṡ_ij; the caller
+    forms ȯ = g − t ∘ o (and l̇se = t)."""
+    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+    scale = _resolve_scale(scale, hd)
+    kernel = functools.partial(
+        _fa_jvp_kernel, scale=scale, causal=causal, window=window,
+        valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, qt, kt, vt, lse)

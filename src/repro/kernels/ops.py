@@ -1,6 +1,18 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-These are the execution layer of the *flat* Krylov vector backend
+Attention (the training/serving hot path — see EXPERIMENTS.md §Perf pair F):
+
+  * ``flash_attention``     — fully differentiable flash attention
+                              (kernels/flash_ad.py: custom_jvp + linear_call
+                              over the forward/backward/JVP kernels; padding
+                              for non-block-aligned S),
+  * ``flash_attention_fwd`` / ``flash_attention_bwd`` /
+    ``flash_attention_jvp`` — the raw (non-differentiable) kernel passes,
+  * ``second_order_tangents`` — trace-time context for exact-Hessian
+                              (forward-over-reverse) traces, re-exported
+                              from flash_ad for the curvature engine.
+
+The remainder are the execution layer of the *flat* Krylov vector backend
 (``core.krylov.FlatVectorBackend``): the solvers in ``core/solvers.py``
 ravel their iterates into flat f32 buffers once per solve and run every
 axpy/dot recurrence through these fusions —
@@ -33,21 +45,70 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import cg_fused, flash_attention as fa
+from . import cg_fused, flash_ad, flash_attention as fa
+from .flash_ad import second_order_tangents  # re-export (curvature engine)
 
 
 def _default_interpret():
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k", "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, blk_q=128, blk_k=128,
                     interpret=None):
+    """Fully differentiable flash attention (training + serving path).
+
+    Forward runs the Pallas online-softmax kernel (with the logsumexp
+    residual); reverse mode transposes onto the Pallas dQ / dK+dV kernels;
+    forward mode (``jax.linearize`` — the curvature engine's J·v) runs the
+    Pallas JVP pass. Exact-Hessian (forward-over-reverse) traces must be
+    bracketed in ``second_order_tangents()`` — see kernels/flash_ad.py.
+    Non-block-aligned S is padded to the 128 tile, tail-masked and sliced.
+    """
     interpret = _default_interpret() if interpret is None else interpret
-    return fa.flash_attention(
+    return flash_ad.flash_mha(
         q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
         interpret=interpret,
     )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "valid_len", "blk_q", "blk_k", "interpret"))
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, valid_len=None,
+                        blk_q=128, blk_k=128, interpret=None):
+    """Raw forward kernel: (o, lse) with lse: (B,H,S) the per-row logsumexp
+    residual the backward/JVP kernels consume (non-differentiable wrapper)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, valid_len=valid_len,
+        blk_q=blk_q, blk_k=blk_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "valid_len", "blk_q", "blk_k", "interpret"))
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
+                        valid_len=None, blk_q=128, blk_k=128, interpret=None):
+    """Raw backward: (dq, dk, dv) from the stored lse — Δ precompute, the
+    Pallas dQ pass, the Pallas dK/dV pass, and the GQA group-sum. Same
+    implementation jax.grad executes (flash_ad.flash_bwd_passes)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_ad.flash_bwd_passes(
+        q, k, v, o, lse, do, causal=causal, window=window,
+        valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "valid_len", "blk_q", "blk_k", "interpret"))
+def flash_attention_jvp(q, k, v, o, lse, qt, kt, vt, *, causal=True,
+                        window=None, valid_len=None, blk_q=128, blk_k=128,
+                        interpret=None):
+    """Raw forward-mode tangent: (ȯ, l̇se) via the Pallas JVP pass (two extra
+    block matmuls per tile: Q̇Kᵀ + QK̇ᵀ against the recomputed P). Same
+    implementation jax.linearize executes (flash_ad.flash_jvp_pass)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_ad.flash_jvp_pass(
+        q, k, v, o, lse, qt, kt, vt, causal=causal, window=window,
+        valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, interpret=interpret)
 
 
 def _pad_flat(x, block):

@@ -7,15 +7,7 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
-    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd). GQA via head grouping."""
-    B, S, H, hd = q.shape
-    KV = k.shape[2]
-    G = H // KV
-    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
-    qg = q.reshape(B, S, KV, G, hd)
-    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32)
-    logits = logits * scale
+def _ref_mask(S, *, causal, window, valid_len):
     qi = jnp.arange(S)[:, None]
     kj = jnp.arange(S)[None, :]
     mask = jnp.ones((S, S), bool)
@@ -23,11 +15,122 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
         mask = kj <= qi
     if window is not None:
         mask = jnp.logical_and(mask, kj > qi - window)
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if valid_len is not None:
+        mask = jnp.logical_and(mask, kj < valid_len)
+    return mask
+
+
+def _ref_logits(q, k, scale, *, causal, window, valid_len):
+    """Masked (B,KV,G,S,S) logits + mask from grouped heads."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _ref_mask(S, causal=causal, window=window, valid_len=valid_len)
+    return jnp.where(mask[None, None, None], logits, NEG_INF), mask
+
+
+def flash_attention_fwd_ref(q, k, v, *, causal=True, window=None,
+                            valid_len=None, scale=None):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (o: (B,S,H,hd), lse: (B,H,S)).
+    GQA via head grouping; lse is the per-row logsumexp residual (0 for
+    fully-masked rows, matching the kernel's guard)."""
+    B, S, H, hd = q.shape
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    logits, _ = _ref_logits(q, k, scale, causal=causal, window=window,
+                            valid_len=valid_len)
+    m = jnp.max(logits, axis=-1)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    l = jnp.sum(jnp.exp(logits - m_safe[..., None]), axis=-1)
+    lse = m_safe + jnp.log(jnp.where(l <= 0.0, 1.0, l))
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
-    return out.reshape(B, S, H, hd).astype(q.dtype)
+    return (
+        out.reshape(B, S, H, hd).astype(q.dtype),
+        lse.reshape(B, H, S),
+    )
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, valid_len=None,
+                        scale=None):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd). GQA via head grouping."""
+    return flash_attention_fwd_ref(q, k, v, causal=causal, window=window,
+                                   valid_len=valid_len, scale=scale)[0]
+
+
+def _ref_p(q, k, lse, scale, *, causal, window, valid_len):
+    """(B,KV,G,S,S) attention weights recomputed from the stored lse."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    logits, mask = _ref_logits(q, k, scale, causal=causal, window=window,
+                               valid_len=valid_len)
+    lseg = lse.reshape(B, KV, H // KV, S)
+    return jnp.where(mask[None, None, None],
+                     jnp.exp(logits - lseg[..., None]), 0.0)
+
+
+def flash_attention_bwd_ref(q, k, v, o, lse, do, *, causal=True, window=None,
+                            valid_len=None, scale=None):
+    """Dense-jnp backward from the stored lse: returns (dq, dk, dv).
+
+    dP = dO Vᵀ, Δ = rowsum(dO ∘ O), dS = P ∘ (dP − Δ);
+    dQ = scale·dS K, dK = scale·dSᵀ Q, dV = Pᵀ dO (GQA group-summed).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    p = _ref_p(q, k, lse, scale, causal=causal, window=window,
+               valid_len=valid_len)
+    qg = q.reshape(B, S, KV, G, hd)
+    dog = do.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    delta = jnp.einsum("bshd,bshd->bsh", o.astype(jnp.float32),
+                       do.astype(jnp.float32)).reshape(B, S, KV, G)
+    dp = jnp.einsum("bskgh,btkh->bkgst", dog, v,
+                    preferred_element_type=jnp.float32)
+    ds = p * (dp - delta.transpose(0, 2, 3, 1)[..., None])
+    dq = scale * jnp.einsum("bkgst,btkh->bskgh", ds, k,
+                            preferred_element_type=jnp.float32)
+    dk = scale * jnp.einsum("bkgst,bskgh->btkh", ds, qg,
+                            preferred_element_type=jnp.float32)
+    dv = jnp.einsum("bkgst,bskgh->btkh", p, dog,
+                    preferred_element_type=jnp.float32)
+    return (dq.reshape(B, S, H, hd).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+def flash_attention_jvp_ref(q, k, v, o, lse, qt, kt, vt, *, causal=True,
+                            window=None, valid_len=None, scale=None):
+    """Dense-jnp tangent from the stored lse: returns (ȯ, l̇se).
+
+    Ṡ = scale·(Q̇Kᵀ + QK̇ᵀ), t = rowsum(P ∘ Ṡ);
+    ȯ = Σ_j P_ij (Ṡ_ij v_j + v̇_j) − t ∘ o, l̇se = t.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    p = _ref_p(q, k, lse, scale, causal=causal, window=window,
+               valid_len=valid_len)
+    qg = q.reshape(B, S, KV, G, hd)
+    qtg = qt.reshape(B, S, KV, G, hd)
+    st = scale * (
+        jnp.einsum("bskgh,btkh->bkgst", qtg, k,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bskgh,btkh->bkgst", qg, kt,
+                     preferred_element_type=jnp.float32)
+    )
+    r = p * st
+    g = (jnp.einsum("bkgst,btkh->bskgh", r, v,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bkgst,btkh->bskgh", p, vt,
+                      preferred_element_type=jnp.float32))
+    t = jnp.sum(r, axis=-1)                                   # (B,KV,G,S)
+    t_bsh = t.transpose(0, 3, 1, 2).reshape(B, S, H)
+    ot = g.reshape(B, S, H, hd) - t_bsh[..., None] * o.astype(jnp.float32)
+    return ot.astype(o.dtype), t.reshape(B, H, S)
 
 
 def bicgstab_x_update_ref(x, p, s, alpha, gamma):

@@ -29,6 +29,7 @@ def train(
     *,
     smoke: bool = True,
     solver: str = "bicgstab",
+    use_flash_attention: bool = False,
     steps: int = 20,
     batch_size: int = 8,
     seq_len: int = 64,
@@ -46,6 +47,8 @@ def train(
     log_fn=print,
 ):
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if use_flash_attention:
+        cfg = cfg.replace(use_flash_attention=True)
     model = build_model(cfg)
     opt_cfg = HFOptConfig(
         name=solver, lr=lr, hvp_batch_frac=hvp_batch_frac,
@@ -104,6 +107,10 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--max-cg-iters", type=int, default=8)
+    ap.add_argument("--flash-attention", action="store_true",
+                    help="route attention through the differentiable Pallas "
+                         "flash kernels (training + prefill; interpret mode "
+                         "off-TPU — see EXPERIMENTS.md §Perf pair F)")
     ap.add_argument("--precondition", action="store_true",
                     help="Jacobi preconditioning (PCG / preconditioned Bi-CG-STAB)")
     ap.add_argument("--krylov-backend", default="tree", choices=["tree", "flat"],
@@ -130,6 +137,7 @@ def main():
 
     _, _, history = train(
         args.arch, smoke=args.smoke, solver=args.solver, steps=args.steps,
+        use_flash_attention=args.flash_attention,
         batch_size=args.batch_size, seq_len=args.seq_len, lr=args.lr,
         max_cg_iters=args.max_cg_iters, precondition=args.precondition,
         krylov_backend=args.krylov_backend,

@@ -70,6 +70,14 @@ def attend_full(p, x, positions, cfg, *, mask=None, cross_kv=None):
 
     ``cross_kv=(k_src, v_src)`` turns this into cross-attention (no mask,
     no RoPE on source side — whisper style).
+
+    Under ``cfg.use_flash_attention`` the default causal(/sliding-window)
+    self-attention runs the fully differentiable Pallas flash kernel
+    (kernels.ops.flash_attention — forward, backward, and JVP passes, so
+    gradients, line searches and every curvature product avoid the O(S²)
+    logits). Explicit masks and cross-attention keep ``_sdpa`` (the kernel
+    covers causal/window/valid-length masks only; cross-attention has
+    mismatched q/kv lengths).
     """
     hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     B, S, _ = x.shape
@@ -79,6 +87,12 @@ def attend_full(p, x, positions, cfg, *, mask=None, cross_kv=None):
         v = _split_heads(dense(p["wv"], x), KV, hd)
         q = apply_rope(q, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
         k = apply_rope(k, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        if cfg.use_flash_attention and mask is None:
+            from ..kernels import ops as kops
+
+            out = kops.flash_attention(q, k, v, causal=True,
+                                       window=cfg.sliding_window)
+            return dense(p["wo"], out.reshape(B, S, H * hd))
         if mask is None:
             mask = causal_mask(S, window=cfg.sliding_window)
     else:
@@ -90,13 +104,19 @@ def attend_full(p, x, positions, cfg, *, mask=None, cross_kv=None):
 
 
 def encoder_attend(p, x, cfg):
-    """Bidirectional self-attention (whisper encoder): no mask, no RoPE."""
+    """Bidirectional self-attention (whisper encoder): no mask, no RoPE.
+    Runs the non-causal flash kernel under ``cfg.use_flash_attention``."""
     hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     B, S, _ = x.shape
     q = _split_heads(dense(p["wq"], x), H, hd)
     k = _split_heads(dense(p["wk"], x), KV, hd)
     v = _split_heads(dense(p["wv"], x), KV, hd)
-    out = _sdpa(q, k, v, jnp.ones((1, 1, S, S), bool))
+    if cfg.use_flash_attention:
+        from ..kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=False, window=None)
+    else:
+        out = _sdpa(q, k, v, jnp.ones((1, 1, S, S), bool))
     return dense(p["wo"], out.reshape(B, S, H * hd))
 
 
@@ -124,8 +144,10 @@ def init_kv_cache(cfg, batch, max_len, dtype) -> KVCache:
 def attend_full_with_cache(p, x, positions, cfg, max_len, dtype=None):
     """Prefill: full-sequence causal attention that also returns the KV cache
     (rolling layout: absolute position p lives in slot p % W). Uses the
-    Pallas flash-attention kernel when ``cfg.use_flash_attention`` and the
-    sequence is block-aligned (serving path; forward-only kernel)."""
+    Pallas flash-attention kernel when ``cfg.use_flash_attention``;
+    non-block-aligned sequences are padded, tail-masked and sliced inside
+    the kernel wrapper (kernels/flash_ad.py), so there is no alignment
+    gate."""
     hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     B, S, _ = x.shape
     q = _split_heads(dense(p["wq"], x), H, hd)
@@ -133,7 +155,7 @@ def attend_full_with_cache(p, x, positions, cfg, max_len, dtype=None):
     v = _split_heads(dense(p["wv"], x), KV, hd)
     q = apply_rope(q, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
     k = apply_rope(k, positions, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
-    if cfg.use_flash_attention and S % 128 == 0:
+    if cfg.use_flash_attention:
         from ..kernels import ops as kops
 
         out = kops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)

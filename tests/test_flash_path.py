@@ -1,14 +1,48 @@
 """The flash-attention model path (cfg.use_flash_attention) must match the
-jnp prefill path (kernel in interpret mode on CPU)."""
+jnp `_sdpa` path (kernel in interpret mode on CPU) — forward, gradient,
+JVP, and through the whole HF step.
+
+Fast tier: one GQA-causal config end-to-end (prefill, grad, jvp, curvature
+products) plus the S=130 pad-and-mask regression. The full grid — sliding
+window, non-causal encoder, every curvature_mode x Krylov backend, gn_cg —
+is ``slow``-marked (CI keeps it collectable; run with ``-m slow``).
+"""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core import HFConfig, hf_init, hf_step
+from repro.core.curvature import make_gnvp_op, make_hvp_op
 from repro.data import lm_batch
 from repro.models import build_model
 
 
+def _tiny(arch="qwen2-1.5b", **kw):
+    cfg = get_smoke_config(arch)
+    if cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=64)
+    return cfg.replace(
+        n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2 if not cfg.is_encoder_decoder else 4,
+        d_ff=128, vocab_size=256, **kw)
+
+
+def _pair(cfg):
+    """(jnp model, flash model) sharing params."""
+    mj = build_model(cfg)
+    mf = build_model(cfg.replace(use_flash_attention=True))
+    return mj, mf, mj.init(jax.random.PRNGKey(0))
+
+
+def _assert_trees_close(a, b, rtol, atol):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------------- prefill ----
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "mixtral-8x22b"])
 def test_flash_prefill_matches_jnp(arch):
     cfg = get_smoke_config(arch)
@@ -25,3 +59,181 @@ def test_flash_prefill_matches_jnp(arch):
     )
     for a, b in zip(jax.tree_util.tree_leaves(cache_jnp), jax.tree_util.tree_leaves(cache_fa)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_prefill_s130_pad_and_mask():
+    """Non-block-aligned S no longer falls back to `_sdpa`: the kernel pads
+    to the 128 tile, masks the tail, and slices — regression for the old
+    silent ``S % 128 == 0`` gate."""
+    cfg = _tiny()
+    model_jnp, model_fa, params = _pair(cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, 2, 130)
+    logits_jnp, cache_jnp = model_jnp.prefill(params, batch, max_len=130)
+    logits_fa, cache_fa = model_fa.prefill(params, batch, max_len=130)
+    np.testing.assert_allclose(
+        np.asarray(logits_fa), np.asarray(logits_jnp), rtol=2e-3, atol=2e-3
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(cache_jnp), jax.tree_util.tree_leaves(cache_fa)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- grad/jvp parity --
+def _grad_parity(cfg, B=2, S=64):
+    model_jnp, model_fa, params = _pair(cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, B, S)
+    f_j, g_j = jax.value_and_grad(model_jnp.loss_fn)(params, batch)
+    f_f, g_f = jax.value_and_grad(model_fa.loss_fn)(params, batch)
+    np.testing.assert_allclose(float(f_f), float(f_j), rtol=1e-5, atol=1e-5)
+    _assert_trees_close(g_f, g_j, rtol=1e-3, atol=1e-4)
+
+
+def _jvp_parity(cfg, B=2, S=64):
+    model_jnp, model_fa, params = _pair(cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, B, S)
+    tan = jax.tree_util.tree_map(
+        lambda p: jnp.cos(jnp.arange(p.size, dtype=jnp.float32)
+                          ).reshape(p.shape).astype(p.dtype), params)
+    _, tj = jax.jvp(lambda p: model_jnp.loss_fn(p, batch), (params,), (tan,))
+    _, tf = jax.jvp(lambda p: model_fa.loss_fn(p, batch), (params,), (tan,))
+    np.testing.assert_allclose(float(tf), float(tj), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_grad_parity_gqa_causal():
+    _grad_parity(_tiny())
+
+
+def test_flash_jvp_parity_gqa_causal():
+    _jvp_parity(_tiny())
+
+
+def test_flash_grad_parity_s130():
+    _grad_parity(_tiny(), S=130)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "whisper-small"])
+def test_flash_grad_parity_grid(arch):
+    # mixtral: sliding window (64) + MoE; whisper: non-causal encoder +
+    # causal decoder + (jnp-path) cross attention
+    cfg = _tiny(arch) if arch != "whisper-small" else get_smoke_config(arch)
+    _grad_parity(cfg)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "whisper-small"])
+def test_flash_jvp_parity_grid(arch):
+    cfg = _tiny(arch) if arch != "whisper-small" else get_smoke_config(arch)
+    _jvp_parity(cfg)
+
+
+# ------------------------------------------------- curvature products -----
+def _models_and_batch(S=32):
+    cfg = _tiny()
+    model_jnp, model_fa, params = _pair(cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, 2, S)
+    tan = jax.tree_util.tree_map(
+        lambda p: jnp.sin(jnp.arange(p.size, dtype=jnp.float32)
+                          ).reshape(p.shape).astype(jnp.float32), params)
+    return model_jnp, model_fa, params, batch, tan
+
+
+@pytest.mark.parametrize("mode", ["naive", "linearize", "chunked"])
+def test_flash_hvp_product_matches_jnp(mode, S=32):
+    """The exact-Hessian product through the flash path (jax.linearize /
+    jvp-of-grad through the attention kernels' second-order rule) matches
+    the jnp path to 1e-4 — the quantity every Krylov iteration consumes."""
+    model_jnp, model_fa, params, batch, tan = _models_and_batch(S)
+    kw = dict(mode=mode, chunk_size=1 if mode == "chunked" else 0)
+    hj = make_hvp_op(model_jnp.loss_fn, params, batch, **kw)(tan)
+    hf = make_hvp_op(model_fa.loss_fn, params, batch, **kw)(tan)
+    _assert_trees_close(hf, hj, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["naive", "linearize"])
+def test_flash_gnvp_product_matches_jnp(mode):
+    """The Gauss-Newton product (J·v via the Pallas JVP pass, Jᵀ·u via the
+    Pallas backward kernels under jax.linear_transpose) matches jnp."""
+    model_jnp, model_fa, params, batch, tan = _models_and_batch()
+    gj = make_gnvp_op(model_jnp.logits_fn, model_jnp.out_loss_fn, params,
+                      batch, mode=mode)(tan)
+    gf = make_gnvp_op(model_fa.logits_fn, model_fa.out_loss_fn, params,
+                      batch, mode=mode)(tan)
+    _assert_trees_close(gf, gj, rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------------- hf_step parity ---
+def _hf_step_pair(solver, mode, backend, S=32, iters=4):
+    cfg = _tiny()
+    model_jnp, model_fa, params = _pair(cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, 2, S)
+    # Well-damped regime: with the paper's default damping at a saddle-heavy
+    # random init, the indefinite Bi-CG-STAB solve amplifies 1e-7 operator
+    # noise into discrete branch flips (NC selection, φ-best iterate) — the
+    # repo's own tree-vs-flat backends differ by more than flash-vs-jnp
+    # there. λ=100 makes A strongly PD so the whole-step comparison measures
+    # the attention path, not branch chaos (measured: 3e-8 parity across
+    # all modes × backends; per-product parity is pinned separately above
+    # at realistic conditioning).
+    hcfg = HFConfig(solver=solver, max_cg_iters=iters, init_damping=100.0,
+                    krylov_backend=backend, curvature_mode=mode,
+                    curvature_chunk_size=1 if mode == "chunked" else 0)
+    out = {}
+    for name, m in (("jnp", model_jnp), ("flash", model_fa)):
+        state = hf_init(params, hcfg)
+        step = jax.jit(lambda p, s, b, m=m: hf_step(
+            m.loss_fn, p, s, b, b, hcfg,
+            model_out_fn=m.logits_fn, out_loss_fn=m.out_loss_fn))
+        newp, _, metrics = step(params, state, batch)
+        out[name] = (newp, metrics)
+    (pj, mj), (pf, mf) = out["jnp"], out["flash"]
+    np.testing.assert_allclose(float(mf["loss"]), float(mj["loss"]),
+                               rtol=1e-5, atol=1e-5)
+    _assert_trees_close(pf, pj, rtol=1e-3, atol=1e-4)
+
+
+def test_hf_step_flash_matches_jnp_fast():
+    """Acceptance fast lane: default mode x default backend."""
+    _hf_step_pair("bicgstab", "linearize", "tree")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["naive", "linearize", "chunked"])
+@pytest.mark.parametrize("backend", ["tree", "flat"])
+def test_hf_step_flash_matches_jnp_grid(mode, backend):
+    """Acceptance grid: all three curvature_modes x both Krylov backends."""
+    _hf_step_pair("bicgstab", mode, backend)
+
+
+@pytest.mark.slow
+def test_hf_step_flash_matches_jnp_gn():
+    _hf_step_pair("gn_cg", "linearize", "tree")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("solver,mode", [
+    ("gn_cg", "linearize"), ("gn_cg", "naive"), ("gn_cg", "chunked"),
+    ("hybrid_cg", "linearize"), ("bicgstab", "linearize"),
+])
+def test_hf_step_flash_sstep_runs(solver, mode):
+    """s-step + flash attention must run for every solver family and
+    curvature mode: the block products vmap the curvature map, so hf_step
+    builds the GN operator under second_order_tangents() when sstep_s > 1
+    (linear_call has no batching rule — kernels/flash_ad.py), and
+    make_gnvp_op re-enters that context around the lazy per-call traces of
+    its naive/chunked modes; exact-Hessian operators are ctx-built by the
+    engine already. Regression: these used to die with an opaque 'Batching
+    rule for linear_call not implemented' deep in the solver."""
+    cfg = _tiny().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                          d_ff=64, vocab_size=128, use_flash_attention=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, 2, 16)
+    hcfg = HFConfig(solver=solver, max_cg_iters=4, sstep_s=2,
+                    curvature_mode=mode,
+                    curvature_chunk_size=1 if mode == "chunked" else 0)
+    state = hf_init(params, hcfg)
+    _, _, metrics = jax.jit(lambda p, s, b: hf_step(
+        m.loss_fn, p, s, b, b, hcfg,
+        model_out_fn=m.logits_fn, out_loss_fn=m.out_loss_fn))(
+        params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
