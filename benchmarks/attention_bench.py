@@ -136,6 +136,20 @@ def run_bench(tiny: bool = False, out_path: str = "BENCH_attention.json",
     return result
 
 
+JSON_OUT = "BENCH_attention.json"
+
+
+def check(result):
+    """Schema/acceptance assertions for BENCH_attention.json (owned by
+    this bench — benchmarks/run.py --check calls it next to the writer;
+    these used to live as a heredoc in the CI workflow)."""
+    assert result["summary"]["mem_ok"], result["summary"]
+    paths = {(r["S"], r["path"], r["impl"]) for r in result["rows"]}
+    n_seqs = len(result["config"]["seqs"])
+    # fwd/fwd_bwd/jvp x flash/sdpa per sequence length
+    assert len(paths) == 6 * n_seqs, paths
+
+
 def run(log=print):
     """benchmarks.run integration: CSV rows from a tiny pass (no JSON)."""
     res = run_bench(tiny=True, out_path=os.devnull, log=lambda *a: None)

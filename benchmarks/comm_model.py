@@ -28,6 +28,13 @@ s iterations —
   (4s+1)·(4s+4) with the r0*/b/x probe columns). Trading bytes for blocking
   syncs is the communication-avoiding deal; it pays when latency dominates
   (the paper's small-batch / many-node regime).
+
+Newton/Chebyshev s-step bases (``basis="newton"|"chebyshev"``): the f32
+monomial depth budget caps s at ~4 (CG) / 2 (Bi-CG-STAB); the adaptive
+bases double it (CG s=8, Bi-CG-STAB s=4 — core/sstep.py, EXPERIMENTS.md
+§Perf pair G) at the cost of ``sstep_bootstrap`` shallow monomial cycles
+up front (one Gram reduction each; the Ritz estimates themselves are free,
+extracted from Grams the solver already reduces).
 """
 from __future__ import annotations
 
@@ -66,39 +73,84 @@ def hf_syncs_per_iteration(cg_iters: int, ls_evals: int) -> int:
 
 
 def sstep_basis_len(s: int, solver: str = "cg") -> int:
-    """Monomial-basis length per s-step cycle: [p, Ap, …, Aᵈp, r, …, A^{d−1}r]
-    with chain depth d = s (CG) or 2s (Bi-CG-STAB: two products/iteration)."""
+    """Basis length per s-step cycle: [p-chain (d+1) | r-chain (d)] with
+    chain depth d = s (CG) or 2s (Bi-CG-STAB: two products/iteration) —
+    independent of the basis polynomial (monomial/Newton/Chebyshev chains
+    have identical shape, core/sstep.py)."""
     d = 2 * s if solver == "bicgstab" else s
     return 2 * d + 1
 
 
+# Mirrors core/sstep.py: f32-safe monomial power applications for the
+# adaptive bases' bootstrap cycles.
+SSTEP_BOOT_APPLICATIONS = 4
+
+
+def sstep_bootstrap(s: int, solver: str = "cg", basis: str = "monomial"):
+    """(bootstrap cycles, iterations they cover) for an s-step solve.
+
+    The monomial basis has no bootstrap. The adaptive (newton/chebyshev)
+    bases open with monomial cycles at the f32-safe depth until k ≥ s
+    iterations have run (the structural rank floor — core/sstep.py), plus
+    one extra margin cycle for Bi-CG-STAB's 2-products-per-iteration
+    chains."""
+    if basis == "monomial":
+        return 0, 0
+    if solver == "bicgstab":
+        s_boot = max(1, min(s, SSTEP_BOOT_APPLICATIONS // 2))
+        n_boot = -(-s // s_boot) + 1
+    else:
+        s_boot = max(1, min(s, SSTEP_BOOT_APPLICATIONS))
+        n_boot = -(-s // s_boot)
+    return n_boot, n_boot * s_boot
+
+
 def hf_sstep_floats_per_iteration(
     dims: Sequence[int], cg_iters: int, ls_evals: int, s: int,
-    solver: str = "cg",
+    solver: str = "cg", basis: str = "monomial",
 ) -> float:
     """Floats exchanged per outer iteration with the s-step solve: gradient
     + the cycle product traffic + one small Gram per cycle + line-search
-    scalars. Each cycle advances BOTH monomial chains — 2d−1 model-sized
+    scalars. Each cycle advances BOTH polynomial chains — 2d−1 model-sized
     products per cycle (chain depth d = s for CG, 2s for Bi-CG-STAB) vs s
     products for s standard CG iterations — so the model-sized traffic is
     asymptotically ~2× standard (s=1 CG reduces exactly to the standard
-    count plus its 3×3 Gram). MORE bytes for s× fewer blocking syncs: the
-    communication-avoiding trade, priced against latency by
+    count plus its 3×3 Gram). The adaptive bases (``basis=`` "newton" /
+    "chebyshev") open with shallow bootstrap cycles whose chains cost
+    proportionally less per cycle; the basis recurrence itself adds zero
+    communication (axpys are node-local, the Ritz estimates ride the Gram
+    the cycle already reduces). MORE bytes for s× fewer blocking syncs:
+    the communication-avoiding trade, priced against latency by
     fig5_scaling.py's sstep series."""
     m = model_size(dims)
-    cycles = math.ceil(cg_iters / max(s, 1))
+    n_boot, covered = sstep_bootstrap(s, solver, basis)
+    s_boot = 0 if n_boot == 0 else covered // n_boot
+    cycles = math.ceil(max(cg_iters - covered, 0) / max(s, 1))
     d = 2 * s if solver == "bicgstab" else s
+    d_boot = 2 * s_boot if solver == "bicgstab" else s_boot
     bl = sstep_basis_len(s, solver)            # == 2d + 1
+    bl_boot = sstep_basis_len(s_boot, solver) if n_boot else 0
     gram_cols = bl + (3 if solver == "bicgstab" else 0)  # r0*/b/x probe cols
-    return (1 + cycles * (2 * d - 1)) * m + cycles * bl * gram_cols + ls_evals
+    gram_cols_boot = bl_boot + (3 if solver == "bicgstab" else 0)
+    products = cycles * (2 * d - 1) + n_boot * max(2 * d_boot - 1, 0)
+    grams = cycles * bl * gram_cols + n_boot * bl_boot * gram_cols_boot
+    return (1 + products) * m + grams + ls_evals
 
 
-def hf_sstep_syncs_per_iteration(cg_iters: int, ls_evals: int, s: int) -> int:
+def hf_sstep_syncs_per_iteration(cg_iters: int, ls_evals: int, s: int,
+                                 solver: str = "cg",
+                                 basis: str = "monomial") -> int:
     """Blocking synchronizations per outer iteration: the K per-Krylov-
     iteration scalar round-trips collapse to one Gram reduction per cycle
-    of s iterations (1 + ceil(K/s) + E vs 1 + K + E). Validated against the
-    executed counts (KrylovResult.syncs) by benchmarks/sstep_bench.py."""
-    return 1 + math.ceil(cg_iters / max(s, 1)) + ls_evals
+    of s iterations (1 + ceil(K/s) + E vs 1 + K + E). The adaptive bases
+    prepend their bootstrap cycles (one Gram each, covering
+    ``sstep_bootstrap`` iterations) — the price of the free Ritz
+    estimates that let s double past the monomial f32 budget. Validated
+    against the executed counts (KrylovResult.syncs) by
+    benchmarks/sstep_bench.py."""
+    n_boot, covered = sstep_bootstrap(s, solver, basis)
+    return (1 + n_boot
+            + math.ceil(max(cg_iters - covered, 0) / max(s, 1)) + ls_evals)
 
 
 def sgd_syncs_per_epoch(n: int, b: int, N: int) -> float:

@@ -279,6 +279,21 @@ def run_bench(tiny: bool = False, out_path: str = "BENCH_curvature.json",
     return result
 
 
+JSON_OUT = "BENCH_curvature.json"
+
+
+def check(result):
+    """Schema/acceptance assertions for BENCH_curvature.json (owned by
+    this bench — benchmarks/run.py --check calls it next to the writer;
+    these used to live as a heredoc in the CI workflow)."""
+    mem = result["memory"]
+    assert mem["flat_memory_ok"], mem
+    s = result["solve"]
+    assert s["naive_s"] > 0 and s["linearize_s"] > 0, s
+    modes = {(r["op"], r["mode"]) for r in result["per_product"]}
+    assert len(modes) == 6, modes          # hvp/gnvp x naive/linearize/chunked
+
+
 def run(log=print):
     """benchmarks.run integration: CSV rows from a tiny pass (no JSON)."""
     res = run_bench(tiny=True, out_path=os.devnull, log=lambda *a: None)

@@ -28,11 +28,14 @@ from repro.core import make_hvp
 from repro.data import classification_dataset
 from repro.models import build_mlp
 
-from .comm_model import hf_sstep_syncs_per_iteration, model_size, speedup_model
+from .comm_model import (hf_sstep_syncs_per_iteration, model_size,
+                         speedup_model, sstep_bootstrap)
 
 NODE_FLOPS = 2.65e12 * 0.5   # paper's Xeon node at 50% efficiency
 K_CG, N_LS = 10, 2
 SSTEP_S = 4                  # s-step series: one Gram sync per 4 CG iterations
+SSTEP_BASIS_S = 8            # Newton-basis series: the depth the adaptive
+                             # bases unlock past the monomial f32 budget
 
 
 def _time_it(fn, *args, reps=3):
@@ -95,4 +98,38 @@ def run(log=print):
             sp_vs_std = sp * t_compute_std / t_compute_ss
             rows.append((f"fig5/sstep{s}_B{B}_N{N}", t_compute_ss * 1e6 / N,
                          f"speedup={sp_vs_std:.2f} syncs={syncs_ss}v{syncs}"))
+        # Newton-basis s-step series (core/sstep.py, §Perf pair G): the
+        # adaptive basis doubles usable s past the monomial f32 budget,
+        # which pays in the DEEP-solve regime — at K=10, s=8's bootstrap
+        # cycles eat the saving (2 boots + 1 cycle == monomial s=4's 3
+        # cycles), so this series models a K=32 solve against its own
+        # K=32 standard baseline (speedups are self-relative;
+        # apples-to-apples within the series). Per-node compute prices
+        # the bootstrap cycles' shallow chains and the full-depth cycles'
+        # 2s−1 products explicitly; the sync count includes one Gram per
+        # bootstrap cycle.
+        sn, K_deep = SSTEP_BASIS_S, 32
+        t_std_deep = t_grad_n + K_deep * t_hvp_n + N_LS * t_ls_n
+        n_boot, covered = sstep_bootstrap(sn, "cg", "newton")
+        s_boot = covered // max(n_boot, 1)
+        cycles = -(-max(K_deep - covered, 0) // sn)
+        products = n_boot * (2 * s_boot - 1) + cycles * (2 * sn - 1)
+        t_compute_nb = (
+            t_grad_n + products * t_hvp_n + N_LS * t_ls_n
+        )
+        syncs_deep = 1 + K_deep + N_LS
+        syncs_nb = hf_sstep_syncs_per_iteration(K_deep, N_LS, sn,
+                                                basis="newton")
+        syncs_mono4 = hf_sstep_syncs_per_iteration(K_deep, N_LS, SSTEP_S)
+        for N in (1, 2, 4, 8, 16, 32):
+            sp = speedup_model(
+                N, compute_s_per_node_unit=t_compute_nb,
+                bytes_per_sync=msize_bytes, syncs=syncs_nb,
+            )
+            sp_vs_std = sp * t_std_deep / t_compute_nb
+            rows.append((f"fig5/sstep{sn}_newton_K{K_deep}_B{B}_N{N}",
+                         t_compute_nb * 1e6 / N,
+                         f"speedup={sp_vs_std:.2f} "
+                         f"syncs={syncs_nb}v{syncs_mono4}(mono4)v"
+                         f"{syncs_deep}(std)"))
     return rows

@@ -1,13 +1,33 @@
 """Benchmark harness — one benchmark family per paper table/figure.
 
+CSV mode (default): print ``name,us_per_call,derived`` rows for every
+registered suite.
+
   PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Check mode (the CI entry point): run every JSON-writing bench, write its
+``BENCH_*.json`` artifact, and execute the bench's OWN ``check(result)``
+assertions — each bench owns the acceptance criteria for the schema it
+writes (the assertions live next to the writer, not copy-pasted into the
+workflow), and the JSONs are uploaded as workflow artifacts so the perf
+trajectory is inspectable per-commit.
+
+  PYTHONPATH=src python benchmarks/run.py --tiny --check [--only sstep]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+if __package__ in (None, ""):
+    # Executed as a script (python benchmarks/run.py): make the repo root
+    # and src/ importable so `benchmarks.*` and `repro.*` resolve.
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (_ROOT, os.path.join(_ROOT, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
 
 
 def main() -> None:
@@ -15,12 +35,49 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,kernels,"
                          "attention,curvature,sstep,roofline")
+    ap.add_argument("--tiny", action="store_true",
+                    help="check mode: run the JSON benches at CI-smoke "
+                         "shapes (same code paths, same schema)")
+    ap.add_argument("--check", action="store_true",
+                    help="run the JSON-writing benches, write BENCH_*.json "
+                         "and execute each bench's own check(result) "
+                         "assertions (the CI bench-smoke entry point)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig3_variants, fig4_batchsize, fig5_scaling, kernels_bench,
-                   attention_bench, curvature_bench, roofline_table,
-                   sstep_bench)
+    from benchmarks import (fig3_variants, fig4_batchsize, fig5_scaling,
+                            kernels_bench, attention_bench, curvature_bench,
+                            roofline_table, sstep_bench)
+
+    if args.check:
+        checked = {
+            "curvature": curvature_bench,
+            "sstep": sstep_bench,
+            "attention": attention_bench,
+        }
+        failures = []
+        for name, mod in checked.items():
+            if only and name not in only:
+                continue
+            print(f"== {name} ({mod.JSON_OUT}) ==")
+            result = mod.run_bench(tiny=args.tiny, out_path=mod.JSON_OUT)
+            try:
+                mod.check(result)
+                print(f"== {name}: check ok ==")
+            except AssertionError as e:
+                failures.append(name)
+                print(f"== {name}: CHECK FAILED: {e} ==")
+        # Re-read what was actually written: the artifact the workflow
+        # uploads must itself satisfy the schema the check ran against.
+        for name, mod in checked.items():
+            if (only and name not in only) or name in failures:
+                continue
+            with open(mod.JSON_OUT) as f:
+                json.load(f)
+        if failures:
+            sys.exit(f"bench checks failed: {', '.join(failures)}")
+        return
+
     suites = {
         "fig3": fig3_variants.run,
         "fig4": fig4_batchsize.run,

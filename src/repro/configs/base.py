@@ -183,8 +183,12 @@ class HFOptConfig:
     # reduction (1 + ceil(K/s) + E reduces per outer step vs 1 + K + E),
     # with a conditioning guard that falls back to the standard solver.
     # sstep_solver: "auto" (derive from `name`) | "cg" | "bicgstab".
+    # sstep_basis picks the chain polynomial: "monomial" (f32 depth budget
+    # s≤4 CG / s≤2 Bi-CG-STAB) | "newton" | "chebyshev" (Ritz-parameterized
+    # conditioned bases that double usable s — EXPERIMENTS.md §Perf pair G).
     sstep_s: int = 1
     sstep_solver: str = "auto"
+    sstep_basis: str = "monomial"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,7 +36,14 @@ which is exactly the communication shape the s-step solvers batch on
 single-tangent operator once (one primal pass) and derives the block form
 from the SAME cached linearization — no second primal. The standalone
 ``make_block_*_op`` builders mirror the curvature-engine constructors for
-direct use (benchmarks, tests).
+direct use (benchmarks, tests). ``pair_apply`` is the s-step solvers'
+consumer view: the p/r polynomial chains (monomial or the shifted-Newton/
+Chebyshev three-term recurrences — core/sstep.py) advance in lock-step, so
+each basis level is ONE width-2 block product through the cached map; the
+Gram of the finished chains then feeds the free Ritz extraction
+(``core.krylov.ritz_from_segment``) that parameterizes the next cycle's
+basis — no probe columns or extra products, the recurrence coefficients
+already express A on the chain.
 
 Measured: ``benchmarks/sstep_bench.py`` (block-HVP amortization rows,
 EXPERIMENTS.md §Perf pair E).
@@ -63,6 +70,22 @@ def unstack_tangents(block):
     leaves = jax.tree_util.tree_leaves(block)
     s = leaves[0].shape[0]
     return [jax.tree_util.tree_map(lambda x, j=j: x[j], block) for j in range(s)]
+
+
+def pair_apply(be, A_, Ab_):
+    """Advance two Krylov power chains one level: (A w, A u) as ONE width-2
+    block curvature product when a block operator is available (the cached
+    linearization residuals are read once for the pair), two singles
+    otherwise. ``be`` is the Krylov vector backend, ``A_``/``Ab_`` the
+    backend-wrapped single/block operators (``Ab_`` may be None)."""
+    if Ab_ is None:
+        return lambda w, u: (A_(w), A_(u))
+
+    def pair(w, u):
+        out = Ab_(be.block_stack([w, u]))
+        return be.block_col(out, 0), be.block_col(out, 1)
+
+    return pair
 
 
 def block_op_from_single(op: Op) -> Op:

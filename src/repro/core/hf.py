@@ -33,12 +33,15 @@ forward+backward per outer step).
 
 ``HFConfig.sstep_s > 1`` swaps the Krylov solve for its s-step
 (communication-avoiding) form (core.sstep): per cycle of s iterations the
-solver grows a monomial basis with width-2 *block* curvature products
-(core.blocks — same cached linearization, residuals read once per pair) and
-collapses all of the cycle's dot products into ONE Gram reduction —
-``1 + ceil(K/s) + E`` blocking reduces per outer step instead of
-``1 + K + E`` (benchmarks/comm_model.py), with a Gram-factorization guard
-that falls back to the standard solver when the basis conditioning degrades.
+solver grows a polynomial basis (``HFConfig.sstep_basis``: monomial power
+chains, or Ritz-parameterized shifted-Newton/Chebyshev chains that double
+the usable depth) with width-2 *block* curvature products (core.blocks —
+same cached linearization, residuals read once per pair) and collapses all
+of the cycle's dot products into ONE Gram reduction — ``1 + ceil(K/s) + E``
+blocking reduces per outer step instead of ``1 + K + E``
+(benchmarks/comm_model.py), with a Gram-factorization guard whose fallback
+chain (adaptive basis → monomial → standard solver) never lets correctness
+depend on a basis surviving.
 """
 from __future__ import annotations
 
@@ -61,7 +64,7 @@ from ..kernels.flash_ad import second_order_tangents
 from .krylov import BACKENDS, get_backend
 from .line_search import armijo
 from .solvers import bicgstab, cg, hutchinson_diag, pcg, sign_correct
-from .sstep import sstep_bicgstab, sstep_cg
+from .sstep import BASES as SSTEP_BASES, sstep_bicgstab, sstep_cg
 from .tree_math import (
     tree_axpy,
     tree_axpy_cast,
@@ -126,19 +129,30 @@ class HFConfig:
                                       # HVP; chunked GN is flat-memory as-is)
     # s-step (communication-avoiding) Krylov solve (core.sstep): sstep_s > 1
     # replaces the standard recurrence with the s-step form — per cycle of s
-    # iterations the solver grows a monomial basis (matvecs only, paired into
-    # width-2 block curvature products through the SAME cached linearization)
-    # and issues ONE Gram reduction in place of s per-iteration dot syncs
-    # (1 + ceil(K/s) + E reduces per outer step vs 1 + K + E — see
-    # benchmarks/comm_model.py). A Gram-factorization guard falls back to the
-    # standard solver when the basis conditioning degrades, so correctness
-    # never depends on the basis surviving. sstep_solver picks the s-step
-    # recurrence: "auto" derives it from `solver` (bicgstab ⇒ s-step
-    # Bi-CG-STAB, the CG family ⇒ s-step CG); "cg"/"bicgstab" force one.
-    # Incompatible with `precondition` (the s-step recurrences are
-    # unpreconditioned; rejected at config time).
+    # iterations the solver grows a polynomial basis (matvecs only, paired
+    # into width-2 block curvature products through the SAME cached
+    # linearization) and issues ONE Gram reduction in place of s
+    # per-iteration dot syncs (1 + ceil(K/s) + E reduces per outer step vs
+    # 1 + K + E — see benchmarks/comm_model.py). A Gram-factorization guard
+    # falls back to the standard solver when the basis conditioning
+    # degrades, so correctness never depends on the basis surviving.
+    # sstep_solver picks the s-step recurrence: "auto" derives it from
+    # `solver` (bicgstab ⇒ s-step Bi-CG-STAB, the CG family ⇒ s-step CG);
+    # "cg"/"bicgstab" force one. Incompatible with `precondition` (the
+    # s-step recurrences are unpreconditioned; rejected at config time).
     sstep_s: int = 1
     sstep_solver: str = "auto"
+    # Basis polynomial for the s-step chains (core.sstep.BASES):
+    # "monomial" is the classic power chain — simple, but its f32 depth
+    # budget caps usable s at ~4 (CG) / 2 (Bi-CG-STAB); "newton"
+    # (Leja-ordered shifted-Newton) and "chebyshev" (Ritz-interval
+    # Chebyshev) are conditioned bases parameterized by Ritz estimates the
+    # cycle Gram already contains for free (bootstrapped from one f32-safe
+    # monomial cycle, refreshed every cycle inside the jitted loop) — they
+    # roughly double usable s (CG s=8, Bi-CG-STAB s=4: EXPERIMENTS.md
+    # §Perf pair G), with a fallback chain Newton/Chebyshev → monomial →
+    # standard solver on guard failure.
+    sstep_basis: str = "monomial"
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
@@ -156,6 +170,11 @@ class HFConfig:
             raise ValueError(
                 f"sstep_solver must be one of {SSTEP_SOLVERS}, "
                 f"got {self.sstep_solver!r}"
+            )
+        if self.sstep_basis not in SSTEP_BASES:
+            raise ValueError(
+                f"sstep_basis must be one of {SSTEP_BASES}, "
+                f"got {self.sstep_basis!r}"
             )
         if self.sstep_s > 1 and self.precondition:
             raise ValueError(
@@ -316,6 +335,7 @@ def hf_step(
             A, b, x0, lam=lam, s=config.sstep_s,
             max_iters=config.max_cg_iters, tol=config.cg_tol,
             backend=krylov_be, A_block=block_op_from_single(A),
+            basis=config.sstep_basis,
         )
     elif config.solver == "bicgstab":
         res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
@@ -415,6 +435,18 @@ def hf_step(
         # measured by benchmarks/sstep_bench.py).
         "krylov_syncs": res.syncs,
         "sstep_fallback": jnp.logical_and(config.sstep_s > 1, res.breakdown),
+        # The subset of sstep_fallback caused by the GRAM GUARD (the basis
+        # degenerating) — Bi-CG-STAB ρ/ω recurrence collapse, which the
+        # standard solver exhibits identically, is excluded. The §Perf
+        # pair G acceptance counts THIS rate.
+        "sstep_basis_fallback": jnp.logical_and(
+            config.sstep_s > 1, res.basis_breakdown),
+        # An adaptive (Newton/Chebyshev) s-step basis failed its Gram guard
+        # and the solve degraded to the monomial basis mid-stream — the
+        # first link of the basis fallback chain (always False for the
+        # standard solvers and the monomial basis).
+        "sstep_basis_degraded": jnp.logical_and(
+            config.sstep_s > 1, res.basis_degraded),
         "nc_found": res.nc_found,
         "nc_used": take_nc,
         "nc_curv": res.nc_curv,

@@ -89,6 +89,21 @@ class KrylovResult(NamedTuple):
                            # factorization guard — for the s-step solvers
                            # with fallback=True this also means the standard
                            # fallback solve ran)
+    basis_degraded: Any = False
+                           # bool: an s-step Newton/Chebyshev basis failed
+                           # its Gram guard and the solve degraded to the
+                           # monomial basis mid-stream (the first link of
+                           # the adaptive → monomial → standard fallback
+                           # chain, core/sstep.py). Always False for the
+                           # standard recurrences and the monomial basis.
+    basis_breakdown: Any = False
+                           # bool: the breakdown (if any) was caused by the
+                           # s-step GRAM GUARD — i.e. the basis itself —
+                           # as opposed to Bi-CG-STAB's intrinsic ρ/ω
+                           # recurrence collapse, which the standard solver
+                           # exhibits identically and which the s-step form
+                           # merely reports through the same fallback path.
+                           # Always False for the standard recurrences.
 
 
 def _resolve(backend):

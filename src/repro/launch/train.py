@@ -42,6 +42,7 @@ def train(
     curvature_chunk_size: int = 0,
     sstep: int = 1,
     sstep_solver: str = "auto",
+    sstep_basis: str = "monomial",
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
     log_fn=print,
@@ -56,7 +57,7 @@ def train(
         krylov_backend=krylov_backend,
         curvature_mode=curvature_mode,
         curvature_chunk_size=curvature_chunk_size,
-        sstep_s=sstep, sstep_solver=sstep_solver,
+        sstep_s=sstep, sstep_solver=sstep_solver, sstep_basis=sstep_basis,
     )
     opt = make_optimizer(
         opt_cfg, model.loss_fn, model_out_fn=model.logits_fn,
@@ -130,6 +131,14 @@ def main():
     ap.add_argument("--sstep-solver", default="auto",
                     choices=["auto", "cg", "bicgstab"],
                     help="s-step recurrence (auto derives it from --solver)")
+    ap.add_argument("--sstep-basis", default="monomial",
+                    choices=["monomial", "newton", "chebyshev"],
+                    help="s-step chain polynomial: monomial power chains "
+                         "(f32-safe to s~4 CG / s~2 Bi-CG-STAB) or the "
+                         "Ritz-parameterized Newton/Chebyshev bases that "
+                         "double usable s (free estimates from the cycle "
+                         "Gram; falls back monomial -> standard on guard "
+                         "failure)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--history-out", default=None)
@@ -144,6 +153,7 @@ def main():
         curvature_mode=args.curvature_mode,
         curvature_chunk_size=args.curvature_chunk_size,
         sstep=args.sstep, sstep_solver=args.sstep_solver,
+        sstep_basis=args.sstep_basis,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
     if args.history_out:

@@ -67,6 +67,7 @@ def make_optimizer(
         curvature_chunk_size=opt.curvature_chunk_size,
         sstep_s=opt.sstep_s,
         sstep_solver=opt.sstep_solver,
+        sstep_basis=opt.sstep_basis,
     )
 
     def init(params):

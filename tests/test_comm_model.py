@@ -13,6 +13,7 @@ from benchmarks.comm_model import (
     sgd_syncs_per_epoch,
     speedup_model,
     sstep_basis_len,
+    sstep_bootstrap,
 )
 
 
@@ -116,3 +117,67 @@ class TestSStepModel:
             K_exec = int(res.iters)
             assert int(res.syncs) <= math.ceil(16 / s)
             assert int(res.syncs) == math.ceil(K_exec / s)
+
+
+class TestSStepBasisModel:
+    """Newton/Chebyshev-basis schedule: bootstrap cycles + doubled s
+    (core/sstep.py, §Perf pair G)."""
+
+    def test_monomial_default_unchanged(self):
+        assert hf_sstep_syncs_per_iteration(16, 2, 4) == 1 + 4 + 2
+        assert (hf_sstep_syncs_per_iteration(16, 2, 4, basis="monomial")
+                == hf_sstep_syncs_per_iteration(16, 2, 4))
+        assert sstep_bootstrap(8, "cg", "monomial") == (0, 0)
+
+    def test_bootstrap_shape(self):
+        # CG: f32-safe depth 4 ⇒ ceil(s/4) cycles covering ≥ s iterations
+        assert sstep_bootstrap(8, "cg", "newton") == (2, 8)
+        assert sstep_bootstrap(4, "cg", "chebyshev") == (1, 4)
+        # Bi-CG-STAB: 2-deep budget + one margin cycle
+        assert sstep_bootstrap(4, "bicgstab", "newton") == (3, 6)
+
+    def test_adaptive_beats_monomial_best_at_doubled_s(self):
+        """The headline schedule: CG s=8 newton under the monomial-best
+        usable depth (s=4), Bi-CG-STAB s=4 under monomial s=2 — despite
+        paying for the bootstrap Grams."""
+        K, E = 16, 2
+        cg8 = hf_sstep_syncs_per_iteration(K, E, 8, solver="cg",
+                                           basis="newton")
+        assert cg8 == 1 + 2 + math.ceil((16 - 8) / 8) + E == 6
+        assert cg8 < hf_sstep_syncs_per_iteration(K, E, 4)      # mono s=4
+        bi4 = hf_sstep_syncs_per_iteration(K, E, 4, solver="bicgstab",
+                                           basis="chebyshev")
+        assert bi4 == 1 + 3 + math.ceil((16 - 6) / 4) + E == 9
+        assert bi4 < hf_sstep_syncs_per_iteration(K, E, 2)      # mono s=2
+
+    def test_adaptive_floats_bounded(self):
+        """Bootstrap chains are shallower, so the adaptive bases cost at
+        most the ~2× monomial chain factor in model-sized traffic."""
+        dims, K, E = (784, 400, 150, 10), 32, 2
+        std = hf_floats_per_iteration(dims, K, E)
+        nb = hf_sstep_floats_per_iteration(dims, K, E, 8, solver="cg",
+                                           basis="newton")
+        assert std < nb < 2.1 * std
+
+    def test_executed_adaptive_counts_within_bound(self):
+        """Executed sync counts of a real Newton-basis solve respect the
+        basis-aware bound (bootstraps + full-depth cycles)."""
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core.sstep import sstep_cg
+
+        rng = np.random.RandomState(2)
+        U, _ = np.linalg.qr(rng.randn(30, 30))
+        d = np.concatenate([1.0 + 0.1 * np.arange(20),
+                            np.linspace(5, 100, 10)]).astype(np.float32)
+        M = jnp.asarray(((U * d) @ U.T).astype(np.float32))
+        b = {"v": jnp.asarray(rng.randn(30).astype(np.float32))}
+        x0 = {"v": jnp.zeros(30, jnp.float32)}
+        op = lambda t: {"v": M @ t["v"]}
+        K = 24
+        res = sstep_cg(op, b, x0, lam=0.0, s=8, max_iters=K, tol=1e-6,
+                       basis="newton")
+        assert not bool(res.breakdown)
+        bound = hf_sstep_syncs_per_iteration(K, 0, 8, solver="cg",
+                                             basis="newton") - 1
+        assert int(res.syncs) <= bound

@@ -1,0 +1,339 @@
+"""Newton/Chebyshev s-step basis layer tests (ISSUE 5).
+
+Covers the four layers the basis subsystem adds:
+  * free Ritz estimation (``core.krylov.ritz_from_segment``): extracted
+    estimates vs ``numpy.linalg.eigvalsh`` on small SPD and indefinite
+    operators, from both monomial and Chebyshev (traced-coefficient)
+    chains;
+  * deterministic Leja ordering (``core.krylov.leja_order``);
+  * the adaptive solvers themselves: monomial breaks at the doubled depth
+    (CG s=8 / Bi-CG-STAB s=4) where Newton/Chebyshev run guard-quiet, on
+    both vector backends;
+  * the fallback chain adaptive → monomial → standard under degenerate
+    spectra / unusable bases, and the config threading
+    (HFConfig.sstep_basis → hf_step metrics → HFOptConfig).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HFConfig, hf_init, hf_step
+from repro.core.krylov import get_backend, leja_order, ritz_from_segment
+from repro.core.solvers import cg
+from repro.core.sstep import (
+    BASES,
+    BasisSpec,
+    _segment_T,
+    _segment_shift,
+    resolve_basis,
+    sstep_bicgstab,
+    sstep_cg,
+)
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+
+def _vec(x):
+    """Two-leaf pytree (vector + matrix leaf) to exercise ravel/unravel."""
+    x = np.asarray(x, np.float32)
+    return {"a": jnp.asarray(x[:5]), "b": jnp.asarray(x[5:]).reshape(-1, 1)}
+
+
+def _unvec(t):
+    return np.concatenate([np.asarray(t["a"]).ravel(), np.asarray(t["b"]).ravel()])
+
+
+def _mat_op(M):
+    def op(v):
+        f = jnp.concatenate([v["a"].ravel(), v["b"].ravel()])
+        out = M @ f
+        return {"a": out[:5], "b": out[5:].reshape(-1, 1)}
+    return op
+
+
+def _clustered_spd(n=30, seed=2):
+    """Damped-curvature-like spectrum: a cluster near 1 plus a spread tail
+    (κ = 100) — deep monomial chains break here, adaptive bases do not."""
+    rng = np.random.RandomState(seed)
+    U, _ = np.linalg.qr(rng.randn(n, n))
+    d = np.concatenate([1.0 + 0.1 * np.arange(20),
+                        np.linspace(5, 100, n - 20)]).astype(np.float32)
+    M = (U * d) @ U.T
+    return (jnp.asarray(M.astype(np.float32)), d,
+            _vec(rng.randn(n)), _vec(np.zeros(n)))
+
+
+def _rel_res(M, x, b):
+    return (np.linalg.norm(np.asarray(M) @ _unvec(x) - _unvec(b))
+            / np.linalg.norm(_unvec(b)))
+
+
+class TestRitzEstimation:
+    """ritz_from_segment vs numpy.linalg.eigvalsh — the estimates are free
+    (Gram + recurrence block only, no extra operator products)."""
+
+    def _eig_setup(self, ev, seed=7):
+        n = len(ev)
+        rng = np.random.RandomState(seed)
+        U, _ = np.linalg.qr(rng.randn(n, n))
+        A = (U * np.asarray(ev)) @ U.T
+        return A, rng.randn(n)
+
+    @pytest.mark.parametrize("ev", [
+        [1.0, 2.0, 3.0, 4.0, 5.0],          # SPD
+        [-2.0, -0.5, 1.0, 3.0, 6.0],        # indefinite
+    ])
+    def test_chebyshev_chain_full_dim_matches_eigvalsh(self, ev):
+        """A full-dimension chain in a conditioned (Chebyshev) basis makes
+        the Ritz values the exact spectrum; the extraction consumes the
+        traced recurrence block (_segment_T)."""
+        A, v0 = self._eig_setup(ev)
+        n = len(ev)
+        lo, hi = min(ev), max(ev)
+        c, h = 0.5 * (lo + hi), 0.6 * (hi - lo)
+        alpha = np.full(n, c, np.float32)
+        beta = np.r_[0.0, np.full(n - 1, h / 2)].astype(np.float32)
+        gamma = np.r_[h, np.full(n - 1, h / 2)].astype(np.float32)
+        ch = [v0]
+        for j in range(n):
+            w = A @ ch[-1]
+            vp = ch[-2] if j > 0 else ch[-1]
+            ch.append((w - alpha[j] * ch[-1] - beta[j] * vp) / gamma[j])
+        V = np.stack(ch).astype(np.float32)
+        Tp = _segment_T(
+            (jnp.asarray(alpha), jnp.asarray(beta), jnp.asarray(gamma)),
+            n + 1)
+        ritz, ok = ritz_from_segment(jnp.asarray(V @ V.T), Tp)
+        assert bool(ok)
+        truth = np.linalg.eigvalsh(A)
+        np.testing.assert_allclose(np.asarray(ritz), truth, rtol=0.02,
+                                   atol=0.02 * np.abs(truth).max())
+
+    def test_monomial_chain_extremes(self):
+        """A short monomial chain's extreme Ritz values approximate the
+        spectral edges (the quantities the Newton shifts / Chebyshev
+        interval actually need); interior values are conditioning-limited
+        in f32 and not asserted."""
+        ev = np.array([-2.0, -0.5, 1.0, 3.0, 6.0])
+        A, v0 = self._eig_setup(ev)
+        n = len(ev)
+        chain = [v0]
+        for _ in range(n):
+            chain.append(A @ chain[-1])
+        V = np.stack(chain).astype(np.float32)
+        ritz, ok = ritz_from_segment(jnp.asarray(V @ V.T),
+                                     _segment_shift(n + 1))
+        assert bool(ok)
+        r = np.asarray(ritz)
+        assert abs(r.max() - ev.max()) < 0.05 * abs(ev.max())
+        assert abs(r.min() - ev.min()) < 0.15 * (ev.max() - ev.min())
+
+    def test_nonfinite_gram_flagged(self):
+        G = jnp.full((4, 4), jnp.inf, jnp.float32)
+        _, ok = ritz_from_segment(G, _segment_shift(4))
+        assert not bool(ok)
+
+
+class TestLejaOrder:
+    def test_known_sequence(self):
+        out = np.asarray(leja_order(jnp.asarray([1.0, 10.0, 5.0])))
+        # magnitude-damped criterion |θ|·Π|θ − chosen|: 10 first, then 5
+        # (5·|5−10| = 25 beats 1·|1−10| = 9) — the dominant-end sweep that
+        # conditions f32 Newton chains (see core.krylov.leja_order)
+        np.testing.assert_array_equal(out, [10.0, 5.0, 1.0])
+
+    def test_deterministic_across_calls(self):
+        vals = jnp.asarray(np.random.RandomState(0).randn(12).astype(np.float32))
+        a = np.asarray(leja_order(vals))
+        b = np.asarray(leja_order(vals))
+        np.testing.assert_array_equal(a, b)
+
+    def test_permutation_invariant_for_distinct_values(self):
+        rng = np.random.RandomState(3)
+        vals = np.unique(rng.randn(10).astype(np.float32))
+        a = np.asarray(leja_order(jnp.asarray(vals)))
+        b = np.asarray(leja_order(jnp.asarray(vals[::-1].copy())))
+        np.testing.assert_array_equal(a, b)
+
+    def test_jit_stable(self):
+        vals = jnp.asarray([3.0, -7.0, 1.5, 0.2], jnp.float32)
+        a = np.asarray(leja_order(vals))
+        b = np.asarray(jax.jit(leja_order)(vals))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestAdaptiveDoublesDepth:
+    """The tentpole claim: monomial breaks at CG s=8 / Bi-CG-STAB s=4,
+    Newton/Chebyshev run those depths guard-quiet."""
+
+    @pytest.mark.parametrize("basis", ["newton", "chebyshev"])
+    def test_cg_s8(self, basis):
+        M, _, b, x0 = _clustered_spd()
+        rm = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=8, max_iters=24,
+                      tol=1e-5, basis="monomial", fallback=False)
+        assert bool(rm.breakdown)          # monomial cannot even start s=8
+        assert int(rm.iters) == 0
+        ra = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=8, max_iters=24,
+                      tol=1e-5, basis=basis, fallback=False)
+        assert not bool(ra.breakdown)
+        assert not bool(ra.basis_degraded)
+        assert _rel_res(M, ra.x, b) < 0.1
+        # communication-avoiding invariant: bootstraps + full-depth cycles,
+        # far below one sync per iteration
+        assert int(ra.syncs) <= 2 + (int(ra.iters) - 8 + 7) // 8 + 1
+
+    @pytest.mark.parametrize("basis", ["newton", "chebyshev"])
+    def test_bicgstab_s4_guard_quiet(self, basis):
+        M, _, b, x0 = _clustered_spd()
+        rm = sstep_bicgstab(_mat_op(M), b, x0, lam=0.0, s=4, max_iters=24,
+                            tol=1e-5, basis="monomial", fallback=False)
+        assert bool(rm.basis_breakdown)    # monomial guard kills s=4
+        ra = sstep_bicgstab(_mat_op(M), b, x0, lam=0.0, s=4, max_iters=24,
+                            tol=1e-5, basis=basis, fallback=False)
+        # any breakdown must be the recurrence's own ρ/ω collapse (which
+        # the standard solver exhibits too), never the Gram guard
+        assert not bool(ra.basis_breakdown)
+        assert not bool(ra.basis_degraded)
+        assert int(ra.iters) >= 4
+        assert _rel_res(M, ra.x, b) < 0.5
+
+    def test_cg_s8_flat_backend_matches_tree(self):
+        M, _, b, x0 = _clustered_spd()
+        kw = dict(lam=0.0, s=8, max_iters=24, tol=1e-5, basis="newton",
+                  fallback=False)
+        rt = sstep_cg(_mat_op(M), b, x0, **kw)
+        rf = sstep_cg(_mat_op(M), b, x0, **kw,
+                      backend=get_backend("flat", template=b, interpret=True))
+        # reduction-order noise can move convergence across a cycle edge
+        assert abs(int(rt.iters) - int(rf.iters)) <= 8
+        assert abs(int(rt.syncs) - int(rf.syncs)) <= 1
+        assert not bool(rf.breakdown)
+        assert _rel_res(M, rf.x, b) < 0.1
+
+
+class TestFallbackChain:
+    """Adaptive → monomial → standard: correctness never depends on a
+    basis surviving."""
+
+    def test_unusable_adaptive_basis_degrades_to_monomial(self):
+        """First link: garbage adaptive coefficients overflow the chain,
+        the guard fires, the solve degrades (sticky) to prefix-guarded
+        monomial cycles and still finishes — basis_degraded records it."""
+        class GarbageBasis(BasisSpec):
+            def coeffs(self, ritz, ok, depth):
+                f32 = jnp.float32
+                return (jnp.full((depth,), 1e30, f32),
+                        jnp.zeros((depth,), f32),
+                        jnp.full((depth,), 1e-30, f32))
+
+        M, _, b, x0 = _clustered_spd()
+        r = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=8, max_iters=24,
+                     tol=1e-5, basis=GarbageBasis("chebyshev"),
+                     fallback=True)
+        assert bool(r.basis_degraded)
+        assert _rel_res(M, r.x, b) < 0.1
+
+    def test_fully_degenerate_spectrum_reaches_standard(self):
+        """Last link: on A = c·I every Krylov chain is rank-1, the
+        (monomial) bootstrap cannot start, and the standard-solver
+        fallback finishes the solve exactly."""
+        n = 30
+        rng = np.random.RandomState(4)
+        M = jnp.asarray(3.0 * np.eye(n, dtype=np.float32))
+        b, x0 = _vec(rng.randn(n)), _vec(np.zeros(n))
+        r = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=8, max_iters=24,
+                     tol=1e-8, basis="chebyshev", fallback=True)
+        assert bool(r.breakdown)
+        assert bool(r.basis_breakdown)
+        np.testing.assert_allclose(_unvec(r.x), _unvec(b) / 3.0,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_few_point_spectrum_converges_in_bootstraps(self):
+        """A 3-eigenvalue spectrum collapses the Krylov space to dim 3:
+        the prefix-guarded bootstrap cycles converge the solve exactly —
+        no breakdown, no degrade, no fallback."""
+        n = 30
+        rng = np.random.RandomState(2)
+        U, _ = np.linalg.qr(rng.randn(n, n))
+        d = np.array([1.0] * 10 + [2.0] * 10 + [5.0] * 10, np.float32)
+        M = jnp.asarray(((U * d) @ U.T).astype(np.float32))
+        b, x0 = _vec(rng.randn(n)), _vec(np.zeros(n))
+        xt = (np.asarray((U / d) @ U.T) @ _unvec(b)).astype(np.float32)
+        r = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=8, max_iters=24,
+                     tol=1e-6, basis="chebyshev", fallback=True)
+        assert not bool(r.breakdown)
+        assert not bool(r.basis_degraded)
+        np.testing.assert_allclose(_unvec(r.x), xt, rtol=1e-3, atol=1e-5)
+
+    def test_converged_warm_start_is_not_a_breakdown(self):
+        """An x0 that already solves the system (a perfect warm start)
+        terminates cleanly: the bootstrap cycles traced after termination
+        grow degenerate chains from the stale residual, and their guard
+        verdicts must be masked — not reported as breakdown/fallback."""
+        M, d, b, x0 = _clustered_spd()
+        xt = np.linalg.solve(np.asarray(M, np.float64),
+                             _unvec(b)).astype(np.float32)
+        r = sstep_cg(_mat_op(M), b, _vec(xt), lam=0.0, s=8, max_iters=24,
+                     tol=1e-4, basis="newton", fallback=False)
+        assert not bool(r.breakdown)
+        assert not bool(r.basis_breakdown)
+        assert int(r.iters) == 0
+        rb = sstep_bicgstab(_mat_op(M), b, _vec(xt), lam=0.0, s=4,
+                            max_iters=24, tol=1e-4, basis="newton",
+                            fallback=False)
+        assert not bool(rb.breakdown)
+        assert int(rb.iters) == 0
+
+    def test_monomial_path_reports_no_degrade(self):
+        M, _, b, x0 = _clustered_spd()
+        r = sstep_cg(_mat_op(M), b, x0, lam=0.0, s=2, max_iters=16,
+                     tol=1e-5, basis="monomial")
+        assert not bool(r.basis_degraded)
+
+
+class TestConfigThreading:
+    def _setup(self):
+        model = build_mlp((8, 16, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 64, 8, 4)
+        params = model.init(jax.random.PRNGKey(1))
+        return model, data, params
+
+    def test_bad_basis_raises(self):
+        with pytest.raises(ValueError, match="sstep_basis"):
+            HFConfig(sstep_basis="legendre")
+        with pytest.raises(ValueError, match="basis"):
+            resolve_basis("legendre")
+        assert resolve_basis(None).kind == "monomial"
+        assert resolve_basis(BasisSpec("newton")).kind == "newton"
+        assert BASES == ("monomial", "newton", "chebyshev")
+
+    @pytest.mark.parametrize("basis", ["newton", "chebyshev"])
+    def test_hf_step_trains_with_adaptive_basis(self, basis):
+        model, data, params = self._setup()
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=16, init_damping=5.0,
+                       sstep_s=8, sstep_basis=basis)
+        state = hf_init(params, cfg)
+        step = jax.jit(lambda p, s: hf_step(
+            model.loss_fn, p, s, data, data, cfg,
+            model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+        losses = []
+        for _ in range(5):
+            params, state, m = step(params, state)
+            losses.append(float(m["loss"]))
+        assert "sstep_basis_degraded" in m and "sstep_basis_fallback" in m
+        assert losses[-1] < 0.7 * losses[0]
+
+    def test_optimizer_threading(self):
+        from repro.configs.base import HFOptConfig
+        from repro.optim import make_optimizer
+        model, data, params = self._setup()
+        opt = make_optimizer(
+            HFOptConfig(name="bicgstab", max_cg_iters=8, sstep_s=4,
+                        sstep_basis="newton"),
+            model.loss_fn, model_out_fn=model.logits_fn,
+            out_loss_fn=model.out_loss_fn,
+        )
+        state = opt.init(params)
+        _, _, m = jax.jit(opt.step)(params, state, data)
+        assert "sstep_basis_fallback" in m
