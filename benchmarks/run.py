@@ -34,7 +34,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,kernels,"
-                         "attention,curvature,sstep,roofline")
+                         "attention,curvature,sstep,decode,roofline")
     ap.add_argument("--tiny", action="store_true",
                     help="check mode: run the JSON benches at CI-smoke "
                          "shapes (same code paths, same schema)")
@@ -47,13 +47,14 @@ def main() -> None:
 
     from benchmarks import (fig3_variants, fig4_batchsize, fig5_scaling,
                             kernels_bench, attention_bench, curvature_bench,
-                            roofline_table, sstep_bench)
+                            decode_bench, roofline_table, sstep_bench)
 
     if args.check:
         checked = {
             "curvature": curvature_bench,
             "sstep": sstep_bench,
             "attention": attention_bench,
+            "decode": decode_bench,
         }
         failures = []
         for name, mod in checked.items():
@@ -86,6 +87,7 @@ def main() -> None:
         "attention": attention_bench.run,
         "curvature": curvature_bench.run,
         "sstep": sstep_bench.run,
+        "decode": decode_bench.run,
         "roofline": roofline_table.run,
     }
     print("name,us_per_call,derived")

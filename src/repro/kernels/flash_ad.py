@@ -102,11 +102,11 @@ def flash_bwd_passes(q, k, v, o, lse, do, **kkw):
                        do.astype(jnp.float32)).transpose(0, 2, 1)
     dq = fa.flash_attention_dq(q, k, v, do, lse, delta, **kkw)
     dkh, dvh = fa.flash_attention_dkv(q, k, v, do, lse, delta, **kkw)
-    B, S, H, hd = q.shape
-    KV = k.shape[2]
+    B, _, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
-    dk = dkh.reshape(B, S, KV, G, hd).sum(3)
-    dv = dvh.reshape(B, S, KV, G, hd).sum(3)
+    dk = dkh.reshape(B, Sk, KV, G, hd).sum(3)
+    dv = dvh.reshape(B, Sk, KV, G, hd).sum(3)
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
@@ -120,33 +120,42 @@ def flash_jvp_pass(q, k, v, o, lse, qt, kt, vt, **kkw):
 
 
 # ----------------------------------------------- second-order (jnp) entry --
-def _chunked_attention(q, k, v, *, causal, window, scale, valid_len, blk):
+def _chunked_attention(q, k, v, bias=None, *, causal, window, scale,
+                       valid_len, blk):
     """Attention as a checkpointed scan over query blocks — the AD-closed
     form the exact-Hessian engine traces through.
 
-    Each step computes softmax(q_blk Kᵀ)V for one (blk, S) tile: peak
-    memory O(S·blk), never the (S, S) logits. K/V enter as (nonlinear)
+    Each step computes softmax(q_blk Kᵀ)V for one (blk, Sk) tile: peak
+    memory O(Sk·blk), never the (Sq, Sk) logits. K/V enter as (nonlinear)
     scan consts and the per-block outputs are stacked ys, so ``lax.scan``'s
     jvp rule gives the tangent scan correct linearity annotations — the
     structure every further transform (transpose, jvp-of-transpose)
     composes with by construction. ``jax.checkpoint`` on the body keeps the
-    same O(S·blk) bound for all of them (P tiles are recomputed, not
-    stored).
+    same O(Sk·blk) bound for all of them (P tiles are recomputed, not
+    stored). ``bias``: optional (B|1, Sq, Sk) additive logit bias, sliced
+    per query block (constant — differentiation passes it through as a
+    zero-tangent const).
     """
     B, S, H, hd = q.shape
-    KV = k.shape[2]
+    T, KV = k.shape[1], k.shape[2]
     G = H // KV
     blk = min(blk, S)
     nb = S // blk
     f32 = jnp.float32
     qs = q.reshape(B, nb, blk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    if bias is not None:
+        bias = jnp.broadcast_to(bias, (B, S, T))
+        bias = bias.reshape(B, nb, blk, T).transpose(1, 0, 2, 3)
+    else:
+        bias = jnp.zeros((nb, 1, 1, 1), f32)
 
     def body(_, x):
-        qb, i0 = x                                  # qb: (B, blk, KV, G, hd)
+        qb, bb, i0 = x                              # qb: (B, blk, KV, G, hd)
         s = jnp.einsum("bskgh,btkh->bkgst", qb, k,
                        preferred_element_type=f32) * scale
+        s = s + bb[:, None, None]
         mask = fa.position_mask(i0 + jnp.arange(blk)[:, None],
-                                jnp.arange(S)[None, :], causal=causal,
+                                jnp.arange(T)[None, :], causal=causal,
                                 window=window, valid_len=valid_len)
         s = jnp.where(mask[None, None, None], s, NEG_INF)
         m = jnp.max(s, axis=-1, keepdims=True)
@@ -158,29 +167,35 @@ def _chunked_attention(q, k, v, *, causal, window, scale, valid_len, blk):
         return None, ob.reshape(B, blk, H, hd).astype(q.dtype)
 
     _, ys = jax.lax.scan(jax.checkpoint(body), None,
-                         (qs, jnp.arange(nb) * blk))
+                         (qs, bias, jnp.arange(nb) * blk))
     return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
 
 
 # -------------------------------------------------------- per-config entry --
 @functools.lru_cache(maxsize=None)
 def _fa_entry(causal, window, scale, blk_q, blk_k, interpret, valid_len,
-              second_order):
+              second_order, has_bias=False):
     """Build (and cache) the differentiable attention callable for one
     static configuration. ``second_order`` is part of the cache key on
     purpose: the two rule sets must be distinct function objects so no
-    jit/trace cache can alias them across contexts."""
+    jit/trace cache can alias them across contexts. ``has_bias`` entries
+    take a fourth (B|1, Sq, Sk) f32 additive-bias operand — a constant
+    w.r.t. differentiation (its tangent is discarded; masks carry no
+    gradient), but a traced residual of every AD pass."""
     kkw = dict(causal=causal, window=window, valid_len=valid_len,
                scale=scale, blk_q=blk_q, blk_k=blk_k, interpret=interpret)
 
     if second_order:
-        return functools.partial(
+        chunked = functools.partial(
             _chunked_attention, causal=causal, window=window, scale=scale,
             valid_len=valid_len, blk=blk_k)
+        if has_bias:
+            return lambda q, k, v, bias: chunked(q, k, v, bias)
+        return chunked
 
     @jax.custom_jvp
-    def fwd_res(q, k, v):
-        return fa.flash_attention_fwd(q, k, v, **kkw)
+    def fwd_res(q, k, v, bias=None):
+        return fa.flash_attention_fwd(q, k, v, bias=bias, **kkw)
 
     @fwd_res.defjvp
     def fwd_res_jvp(primals, tangents):
@@ -195,58 +210,85 @@ def _fa_entry(causal, window, scale, blk_q, blk_k, interpret, valid_len,
 
     def _tan(res, lin):
         # JVP flash pass (Pallas): linear in (q̇, k̇, v̇) given residuals.
-        return flash_jvp_pass(*res, *lin, **kkw)[0]
+        q, k, v, o, lse, bias = res
+        return flash_jvp_pass(q, k, v, o, lse, *lin, bias=bias, **kkw)[0]
 
     def _tan_transpose(res, ct):
         # Transpose of _tan == the attention VJP: Pallas dQ + dK/dV passes
         # (this is what jax.grad / jax.linear_transpose execute).
-        return flash_bwd_passes(*res, ct, **kkw)
+        q, k, v, o, lse, bias = res
+        return flash_bwd_passes(q, k, v, o, lse, ct, bias=bias, **kkw)
 
-    @jax.custom_jvp
-    def fa_o(q, k, v):
-        return fwd_res(q, k, v)[0]
+    if has_bias:
+        @jax.custom_jvp
+        def fa_o(q, k, v, bias):
+            return fwd_res(q, k, v, bias)[0]
 
-    @fa_o.defjvp
-    def fa_o_jvp(primals, tangents):
-        q, k, v = primals
-        o, lse = fwd_res(q, k, v)
-        ot = jax.custom_derivatives.linear_call(
-            _tan, _tan_transpose, (q, k, v, o, lse), tuple(tangents))
-        return o, ot
+        @fa_o.defjvp
+        def fa_o_jvp(primals, tangents):
+            q, k, v, bias = primals
+            o, lse = fwd_res(q, k, v, bias)
+            # the bias tangent is dropped: masks are constants of the model
+            ot = jax.custom_derivatives.linear_call(
+                _tan, _tan_transpose, (q, k, v, o, lse, bias),
+                tuple(tangents[:3]))
+            return o, ot
+    else:
+        @jax.custom_jvp
+        def fa_o(q, k, v):
+            return fwd_res(q, k, v)[0]
+
+        @fa_o.defjvp
+        def fa_o_jvp(primals, tangents):
+            q, k, v = primals
+            o, lse = fwd_res(q, k, v)
+            ot = jax.custom_derivatives.linear_call(
+                _tan, _tan_transpose, (q, k, v, o, lse, None),
+                tuple(tangents))
+            return o, ot
 
     return jax.jit(fa_o)
 
 
 # ------------------------------------------------------------ public entry --
 def flash_mha(q, k, v, *, causal=True, window=None, scale=None,
-              blk_q=128, blk_k=128, interpret=False):
+              blk_q=128, blk_k=128, interpret=False, bias=None):
     """Differentiable flash attention with pad-and-mask block alignment.
 
-    q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd). When S is not a multiple
-    of the kernel block, inputs are zero-padded to the next 128 multiple,
-    the padded key tail is masked inside the kernels (``valid_len``) and the
-    output is sliced back. The rule set (Pallas first-order vs AD-closed
-    chunked-jnp) is picked by ``second_order_tangents()`` at trace time; see
-    module docstring.
+    q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd). Query and key lengths
+    may differ (cross-attention). When a length is not a multiple of the
+    kernel block, that side is zero-padded to the next 128 multiple, the
+    padded key tail is masked inside the kernels (``valid_len``), padded
+    query rows are sliced back off (their tangents/cotangents are exact
+    zeros). ``bias``: optional (B|1, Sq, Sk) f32 additive logit bias — the
+    explicit-mask route (0 attendable / -1e30 dropped); it is treated as a
+    constant under differentiation. The rule set (Pallas first-order vs
+    AD-closed chunked-jnp) is picked by ``second_order_tangents()`` at trace
+    time; see module docstring.
     """
-    B, S, H, hd = q.shape
-    if k.shape[1] != S:
-        raise ValueError(
-            f"flash_mha requires matching q/kv lengths, got {S} vs "
-            f"{k.shape[1]} (cross-attention stays on the jnp path)")
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
     scale = float(scale if scale is not None else 1.0 / (hd ** 0.5))
-    # Strict 128-tile contract: any S that is not a 128 multiple is padded
-    # (including S < 128) — sub-128 blocks would hand the TPU lane dimension
-    # non-aligned logits/LSE tiles. 128-multiple S runs unpadded with the
-    # caller's block sizes.
-    if S % 128 == 0:
-        Sp, valid_len = S, None
-    else:
-        Sp, valid_len = -(-S // 128) * 128, S
+    # Strict 128-tile contract: any length that is not a 128 multiple is
+    # padded (including < 128) — sub-128 blocks would hand the TPU lane
+    # dimension non-aligned logits/LSE tiles. 128-multiple lengths run
+    # unpadded with the caller's block sizes.
+    Sqp = -(-Sq // 128) * 128
+    Skp = -(-Sk // 128) * 128
+    valid_len = Sk if Skp != Sk else None
     entry = _fa_entry(causal, window, scale, blk_q, blk_k, bool(interpret),
-                      valid_len, second_order_active())
-    if Sp != S:
-        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
-        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
-    o = entry(q, k, v)
-    return o[:, :S] if Sp != S else o
+                      valid_len, second_order_active(), bias is not None)
+    if Sqp != Sq:
+        qpad = ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0))
+        q = jnp.pad(q, qpad)
+    if Skp != Sk:
+        kpad = ((0, 0), (0, Skp - Sk), (0, 0), (0, 0))
+        k, v = jnp.pad(k, kpad), jnp.pad(v, kpad)
+    if bias is not None:
+        bias = jnp.pad(bias.astype(jnp.float32),
+                       ((0, 0), (0, Sqp - Sq), (0, Skp - Sk)),
+                       constant_values=NEG_INF)
+        o = entry(q, k, v, bias)
+    else:
+        o = entry(q, k, v)
+    return o[:, :Sq] if Sqp != Sq else o

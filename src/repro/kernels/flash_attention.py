@@ -7,9 +7,13 @@ the block; fully-masked key blocks contribute nothing (the m/l recurrence is
 a no-op for -inf rows). GQA is handled in the index maps (kv head =
 q head // group). ``valid_len`` masks a zero-padded key tail so
 non-block-aligned sequences can be padded to the 128 lane tile and sliced
-(see kernels.flash_ad.flash_mha).
+(see kernels.flash_ad.flash_mha). Query and key lengths may differ
+(cross-attention), and every kernel takes an optional (B|1, Sq, Sk) f32
+additive logit ``bias`` operand — the pad-and-mask route for explicit
+attention masks (0 attendable / -1e30 dropped; batch-1 biases broadcast in
+the index map without a materialized copy).
 
-Kernels (S = q length == kv length, hd = head dim):
+Kernels (S = q length, hd = head dim):
 
   * ``_fa_kernel``      — forward; emits O and the per-row logsumexp
                           LSE_i = m_i + log l_i, the residual every other
@@ -72,8 +76,13 @@ def _block_mask(qi, ki, blk_q, blk_k, *, causal, window, valid_len):
                          valid_len=valid_len)
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
-               scale, causal, window, valid_len, blk_q, blk_k, n_k_blocks):
+def _fa_kernel(q_ref, k_ref, v_ref, *refs,
+               scale, causal, window, valid_len, blk_q, blk_k, n_k_blocks,
+               has_bias=False):
+    if has_bias:
+        bias_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, lse_ref, m_scr, l_scr, acc_scr = refs
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -89,6 +98,10 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale                                               # (blk_q, blk_k)
+    if has_bias:
+        # additive f32 bias tile (explicit masks: 0 attend / NEG_INF drop);
+        # masked entries underflow exp() to exact 0 below
+        logits = logits + bias_ref[0]
 
     mask = _block_mask(qi, ki, blk_q, blk_k, causal=causal, window=window,
                        valid_len=valid_len)
@@ -122,19 +135,25 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
 
 
 def _recompute_p(q, k, lse, qi, ki, *, scale, causal, window, valid_len,
-                 blk_q, blk_k):
-    """P block from the stored LSE: P_ij = exp(scale·q_i·k_j − lse_i)."""
+                 blk_q, blk_k, bias=None):
+    """P block from the stored LSE: P_ij = exp(scale·q_i·k_j + bias − lse_i)."""
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale
+    if bias is not None:
+        s = s + bias
     mask = _block_mask(qi, ki, blk_q, blk_k, causal=causal, window=window,
                        valid_len=valid_len)
     return jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0), mask
 
 
-def _fa_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-                  acc_scr, *, scale, causal, window, valid_len, blk_q, blk_k,
-                  n_k_blocks):
+def _fa_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, *refs,
+                  scale, causal, window, valid_len, blk_q, blk_k,
+                  n_k_blocks, has_bias=False):
+    if has_bias:
+        bias_ref, dq_ref, acc_scr = refs
+    else:
+        dq_ref, acc_scr = refs
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -151,7 +170,8 @@ def _fa_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
     p, _ = _recompute_p(q, k, lse, qi, ki, scale=scale, causal=causal,
                         window=window, valid_len=valid_len,
-                        blk_q=blk_q, blk_k=blk_k)
+                        blk_q=blk_q, blk_k=blk_k,
+                        bias=bias_ref[0] if has_bias else None)
     dp = jax.lax.dot_general(                               # dO @ Vᵀ
         do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -166,9 +186,13 @@ def _fa_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         dq_ref[0, :, 0, :] = (acc_scr[...] * scale).astype(dq_ref.dtype)
 
 
-def _fa_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                   dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, window,
-                   valid_len, blk_q, blk_k, n_q_blocks):
+def _fa_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, *refs,
+                   scale, causal, window, valid_len, blk_q, blk_k,
+                   n_q_blocks, has_bias=False):
+    if has_bias:
+        bias_ref, dk_ref, dv_ref, dk_scr, dv_scr = refs
+    else:
+        dk_ref, dv_ref, dk_scr, dv_scr = refs
     # grid (B, H, k_blocks, q_blocks): reduction over q blocks (innermost)
     ki = pl.program_id(2)
     qi = pl.program_id(3)
@@ -187,7 +211,8 @@ def _fa_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
     p, _ = _recompute_p(q, k, lse, qi, ki, scale=scale, causal=causal,
                         window=window, valid_len=valid_len,
-                        blk_q=blk_q, blk_k=blk_k)
+                        blk_q=blk_q, blk_k=blk_k,
+                        bias=bias_ref[0] if has_bias else None)
     dv_scr[...] += jax.lax.dot_general(                     # Pᵀ @ dO
         p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -208,8 +233,12 @@ def _fa_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 
 def _fa_jvp_kernel(q_ref, k_ref, v_ref, qt_ref, kt_ref, vt_ref, lse_ref,
-                   g_ref, t_ref, g_scr, t_scr, *, scale, causal, window,
-                   valid_len, blk_q, blk_k, n_k_blocks):
+                   *refs, scale, causal, window, valid_len, blk_q, blk_k,
+                   n_k_blocks, has_bias=False):
+    if has_bias:
+        bias_ref, g_ref, t_ref, g_scr, t_scr = refs
+    else:
+        g_ref, t_ref, g_scr, t_scr = refs
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -228,7 +257,8 @@ def _fa_jvp_kernel(q_ref, k_ref, v_ref, qt_ref, kt_ref, vt_ref, lse_ref,
 
     p, mask = _recompute_p(q, k, lse, qi, ki, scale=scale, causal=causal,
                            window=window, valid_len=valid_len,
-                           blk_q=blk_q, blk_k=blk_k)
+                           blk_q=blk_q, blk_k=blk_k,
+                           bias=bias_ref[0] if has_bias else None)
     st = (jax.lax.dot_general(                              # Q̇ Kᵀ + Q K̇ᵀ
         qt, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) + jax.lax.dot_general(
@@ -252,43 +282,64 @@ def _fa_jvp_kernel(q_ref, k_ref, v_ref, qt_ref, kt_ref, vt_ref, lse_ref,
 
 # --------------------------------------------------------------- wrappers --
 def _shapes(q, k, blk_q, blk_k):
-    B, S, H, hd = q.shape
-    KV = k.shape[2]
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
-    blk_q = min(blk_q, S)
-    blk_k = min(blk_k, S)
-    assert S % blk_q == 0 and S % blk_k == 0, (S, blk_q, blk_k)
-    return B, S, H, hd, KV, G, blk_q, blk_k, S // blk_q, S // blk_k
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, Sk, blk_q, blk_k)
+    return B, Sq, Sk, H, hd, KV, G, blk_q, blk_k, Sq // blk_q, Sk // blk_k
 
 
 def _resolve_scale(scale, hd):
     return float(scale if scale is not None else 1.0 / (hd ** 0.5))
 
 
+def _bias_spec(bias, blk_q, blk_k, transposed_grid=False):
+    """BlockSpec for the optional (Bb, Sq, Sk) f32 additive-bias operand.
+    Bb == 1 broadcasts over the batch in the index map (no materialized
+    copy). ``transposed_grid``: the dK/dV grid is (B, H, k, q)."""
+    bb = bias.shape[0]
+    if transposed_grid:
+        return pl.BlockSpec((1, blk_q, blk_k),
+                            lambda b, h, j, i: (b if bb > 1 else 0, i, j))
+    return pl.BlockSpec((1, blk_q, blk_k),
+                        lambda b, h, i, j: (b if bb > 1 else 0, i, j))
+
+
 def flash_attention_fwd(q, k, v, *, causal=True, window=None, valid_len=None,
-                        scale=None, blk_q=128, blk_k=128, interpret=False):
-    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (o: (B,S,H,hd), lse: (B,H,S))."""
-    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+                        scale=None, blk_q=128, blk_k=128, interpret=False,
+                        bias=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (o: (B,Sq,H,hd), lse: (B,H,Sq)).
+    ``bias``: optional (B|1, Sq, Sk) f32 additive logit bias (explicit
+    masks: 0 attend / NEG_INF drop)."""
+    B, Sq, Sk, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
     scale = _resolve_scale(scale, hd)
     kernel = functools.partial(
         _fa_kernel, scale=scale, causal=causal, window=window,
         valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
+        has_bias=bias is not None,
     )
+    in_specs = [
+        pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+    ]
+    args = (q, k, v)
+    if bias is not None:
+        in_specs.append(_bias_spec(bias, blk_q, blk_k))
+        args = args + (bias,)
     return pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
             pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
         ),
         out_shape=(
             jax.ShapeDtypeStruct(q.shape, q.dtype),
-            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
         ),
         scratch_shapes=[
             pltpu.VMEM((blk_q, 1), jnp.float32),
@@ -296,68 +347,81 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=None, valid_len=None,
             pltpu.VMEM((blk_q, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, valid_len=None,
-                    scale=None, blk_q=128, blk_k=128, interpret=False):
-    """Forward only (serving path): q (B,S,H,hd), k/v (B,S,KV,hd) -> o."""
+                    scale=None, blk_q=128, blk_k=128, interpret=False,
+                    bias=None):
+    """Forward only (serving path): q (B,Sq,H,hd), k/v (B,Sk,KV,hd) -> o."""
     return flash_attention_fwd(
         q, k, v, causal=causal, window=window, valid_len=valid_len,
-        scale=scale, blk_q=blk_q, blk_k=blk_k, interpret=interpret,
+        scale=scale, blk_q=blk_q, blk_k=blk_k, interpret=interpret, bias=bias,
     )[0]
 
 
 def flash_attention_dq(q, k, v, do, lse, delta, *, causal=True, window=None,
                        valid_len=None, scale=None, blk_q=128, blk_k=128,
-                       interpret=False):
-    """Backward dQ pass. lse/delta: (B,H,S). Returns dq (B,S,H,hd)."""
-    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+                       interpret=False, bias=None):
+    """Backward dQ pass. lse/delta: (B,H,Sq). Returns dq (B,Sq,H,hd)."""
+    B, Sq, Sk, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
     scale = _resolve_scale(scale, hd)
     kernel = functools.partial(
         _fa_dq_kernel, scale=scale, causal=causal, window=window,
         valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
+        has_bias=bias is not None,
     )
+    in_specs = [
+        pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+        pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+    ]
+    args = (q, k, v, do, lse, delta)
+    if bias is not None:
+        in_specs.append(_bias_spec(bias, blk_q, blk_k))
+        args = args + (bias,)
     return pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
-            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
-            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((blk_q, hd), jnp.float32)],
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(*args)
 
 
 def flash_attention_dkv(q, k, v, do, lse, delta, *, causal=True, window=None,
                         valid_len=None, scale=None, blk_q=128, blk_k=128,
-                        interpret=False):
+                        interpret=False, bias=None):
     """Backward dK/dV pass, per *query* head (the caller sums each GQA
-    group). Returns (dk_h, dv_h): (B,S,H,hd)."""
-    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+    group). Returns (dk_h, dv_h): (B,Sk,H,hd)."""
+    B, Sq, Sk, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
     scale = _resolve_scale(scale, hd)
     kernel = functools.partial(
         _fa_dkv_kernel, scale=scale, causal=causal, window=window,
         valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_q_blocks=nq,
+        has_bias=bias is not None,
     )
+    in_specs = [
+        pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, j, i: (b, i, h, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, j, i: (b, i, h, 0)),
+        pl.BlockSpec((1, 1, blk_q), lambda b, h, j, i: (b, h, i)),
+        pl.BlockSpec((1, 1, blk_q), lambda b, h, j, i: (b, h, i)),
+    ]
+    args = (q, k, v, do, lse, delta)
+    if bias is not None:
+        in_specs.append(_bias_spec(bias, blk_q, blk_k, transposed_grid=True))
+        args = args + (bias,)
     return pl.pallas_call(
         kernel,
         grid=(B, H, nk, nq),
-        in_specs=[
-            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, j, i: (b, i, h, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, j, i: (b, i, h, 0)),
-            pl.BlockSpec((1, 1, blk_q), lambda b, h, j, i: (b, h, i)),
-            pl.BlockSpec((1, 1, blk_q), lambda b, h, j, i: (b, h, i)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h, 0)),
             pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, j, i: (b, j, h, 0)),
@@ -365,52 +429,58 @@ def flash_attention_dkv(q, k, v, do, lse, delta, *, causal=True, window=None,
         out_shape=(
             # per-q-head partials stay f32 so the GQA group-sum outside the
             # kernel accumulates at full precision even for bf16 models
-            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
-            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sk, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sk, H, hd), jnp.float32),
         ),
         scratch_shapes=[
             pltpu.VMEM((blk_k, hd), jnp.float32),
             pltpu.VMEM((blk_k, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(*args)
 
 
 def flash_attention_jvp(q, k, v, qt, kt, vt, lse, *, causal=True, window=None,
                         valid_len=None, scale=None, blk_q=128, blk_k=128,
-                        interpret=False):
-    """Tangent pass: returns (g: (B,S,H,hd), t: (B,H,S)) with
+                        interpret=False, bias=None):
+    """Tangent pass: returns (g: (B,Sq,H,hd), t: (B,H,Sq)) with
     g_i = Σ_j P_ij (Ṡ_ij v_j + v̇_j) and t_i = Σ_j P_ij Ṡ_ij; the caller
     forms ȯ = g − t ∘ o (and l̇se = t)."""
-    B, S, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
+    B, Sq, Sk, H, hd, KV, G, blk_q, blk_k, nq, nk = _shapes(q, k, blk_q, blk_k)
     scale = _resolve_scale(scale, hd)
     kernel = functools.partial(
         _fa_jvp_kernel, scale=scale, causal=causal, window=window,
         valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, n_k_blocks=nk,
+        has_bias=bias is not None,
     )
+    in_specs = [
+        pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
+    ]
+    args = (q, k, v, qt, kt, vt, lse)
+    if bias is not None:
+        in_specs.append(_bias_spec(bias, blk_q, blk_k))
+        args = args + (bias,)
     return pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
-            pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
             pl.BlockSpec((1, 1, blk_q), lambda b, h, i, j: (b, h, i)),
         ),
         out_shape=(
-            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
-            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sq, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
         ),
         scratch_shapes=[
             pltpu.VMEM((blk_q, hd), jnp.float32),
             pltpu.VMEM((blk_q, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, qt, kt, vt, lse)
+    )(*args)

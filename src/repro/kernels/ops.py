@@ -12,6 +12,21 @@ Attention (the training/serving hot path — see EXPERIMENTS.md §Perf pair F):
                               (forward-over-reverse) traces, re-exported
                               from flash_ad for the curvature engine.
 
+Decode (the serving hot path — see EXPERIMENTS.md §Perf pair H):
+
+  * ``flash_decode``        — split-K single-query decode over a dense
+                              rolling KV cache (kernels/flash_decode.py);
+                              ``return_stats`` exposes the (o, m, l)
+                              partials contract models/decode_sharded.py
+                              merges across shards,
+  * ``flash_decode_paged``  — the same kernel over the shared page pool
+                              (models/kv_paged.py) with a scalar-prefetched
+                              page table — no dense per-sequence gather,
+  * ``decode_bias`` / ``paged_bias`` — the ONE definition of decode-mask
+                              semantics (rolling-slot validity, ragged t,
+                              sliding window, unmapped pages), shared by
+                              the kernels, the jnp oracles, and `_sdpa`.
+
 The remainder are the execution layer of the *flat* Krylov vector backend
 (``core.krylov.FlatVectorBackend``): the solvers in ``core/solvers.py``
 ravel their iterates into flat f32 buffers once per solve and run every
@@ -45,8 +60,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import cg_fused, flash_ad, flash_attention as fa
+from . import cg_fused, flash_ad, flash_attention as fa, flash_decode as fd
 from .flash_ad import second_order_tangents  # re-export (curvature engine)
+from .flash_decode import decode_bias, paged_bias  # re-export (mask->bias)
 
 
 def _default_interpret():
@@ -54,7 +70,7 @@ def _default_interpret():
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, blk_q=128, blk_k=128,
-                    interpret=None):
+                    interpret=None, bias=None):
     """Fully differentiable flash attention (training + serving path).
 
     Forward runs the Pallas online-softmax kernel (with the logsumexp
@@ -62,38 +78,42 @@ def flash_attention(q, k, v, *, causal=True, window=None, blk_q=128, blk_k=128,
     forward mode (``jax.linearize`` — the curvature engine's J·v) runs the
     Pallas JVP pass. Exact-Hessian (forward-over-reverse) traces must be
     bracketed in ``second_order_tangents()`` — see kernels/flash_ad.py.
-    Non-block-aligned S is padded to the 128 tile, tail-masked and sliced.
+    Non-block-aligned lengths are padded to the 128 tile, tail-masked and
+    sliced; q and kv lengths may differ (cross-attention). ``bias``:
+    optional (B|1, Sq, Sk) f32 additive logit bias — the explicit-mask
+    route (constant under differentiation).
     """
     interpret = _default_interpret() if interpret is None else interpret
     return flash_ad.flash_mha(
         q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
-        interpret=interpret,
+        interpret=interpret, bias=bias,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "valid_len", "blk_q", "blk_k", "interpret"))
 def flash_attention_fwd(q, k, v, *, causal=True, window=None, valid_len=None,
-                        blk_q=128, blk_k=128, interpret=None):
+                        blk_q=128, blk_k=128, interpret=None, bias=None):
     """Raw forward kernel: (o, lse) with lse: (B,H,S) the per-row logsumexp
     residual the backward/JVP kernels consume (non-differentiable wrapper)."""
     interpret = _default_interpret() if interpret is None else interpret
     return fa.flash_attention_fwd(
         q, k, v, causal=causal, window=window, valid_len=valid_len,
-        blk_q=blk_q, blk_k=blk_k, interpret=interpret,
+        blk_q=blk_q, blk_k=blk_k, interpret=interpret, bias=bias,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "valid_len", "blk_q", "blk_k", "interpret"))
 def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
-                        valid_len=None, blk_q=128, blk_k=128, interpret=None):
+                        valid_len=None, blk_q=128, blk_k=128, interpret=None,
+                        bias=None):
     """Raw backward: (dq, dk, dv) from the stored lse — Δ precompute, the
     Pallas dQ pass, the Pallas dK/dV pass, and the GQA group-sum. Same
     implementation jax.grad executes (flash_ad.flash_bwd_passes)."""
     interpret = _default_interpret() if interpret is None else interpret
     return flash_ad.flash_bwd_passes(
-        q, k, v, o, lse, do, causal=causal, window=window,
+        q, k, v, o, lse, do, causal=causal, window=window, bias=bias,
         valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, interpret=interpret)
 
 
@@ -101,14 +121,50 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
     "causal", "window", "valid_len", "blk_q", "blk_k", "interpret"))
 def flash_attention_jvp(q, k, v, o, lse, qt, kt, vt, *, causal=True,
                         window=None, valid_len=None, blk_q=128, blk_k=128,
-                        interpret=None):
+                        interpret=None, bias=None):
     """Raw forward-mode tangent: (ȯ, l̇se) via the Pallas JVP pass (two extra
     block matmuls per tile: Q̇Kᵀ + QK̇ᵀ against the recomputed P). Same
     implementation jax.linearize executes (flash_ad.flash_jvp_pass)."""
     interpret = _default_interpret() if interpret is None else interpret
     return flash_ad.flash_jvp_pass(
-        q, k, v, o, lse, qt, kt, vt, causal=causal, window=window,
+        q, k, v, o, lse, qt, kt, vt, causal=causal, window=window, bias=bias,
         valid_len=valid_len, blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "blk_k", "n_splits", "interpret", "return_stats"))
+def flash_decode(q, k, v, bias, *, scale=None, blk_k=128, n_splits=8,
+                 interpret=None, return_stats=False):
+    """Split-K flash decode over a dense rolling cache (serving hot path).
+
+    q: (B,H,hd) one query row per sequence; k/v: (B,W,KV,hd); bias: (B|1,W)
+    additive mask row from ``decode_bias`` (rolling-slot validity, ragged
+    per-sequence t, sliding window). The grid parallelizes over KV blocks;
+    partials merge with the logsumexp combine (kernels/flash_decode.py).
+    ``return_stats`` additionally returns global (m, l): (B,H) — the
+    contract models/decode_sharded.py uses to merge across shards.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return fd.flash_decode(
+        q, k, v, bias, scale=scale, blk_k=blk_k, n_splits=n_splits,
+        interpret=interpret, return_stats=return_stats)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "interpret", "return_stats"))
+def flash_decode_paged(q, k_pool, v_pool, page_table, bias, *, scale=None,
+                       interpret=None, return_stats=False):
+    """Split-K flash decode over the shared page pool (models/kv_paged.py).
+
+    The page table is scalar-prefetched so the kernel's K/V index maps
+    gather physical pages directly — no dense per-sequence copy. bias from
+    ``paged_bias`` masks the beyond-length tail, sliding window, and
+    unmapped pages.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return fd.flash_decode_paged(
+        q, k_pool, v_pool, page_table, bias, scale=scale,
+        interpret=interpret, return_stats=return_stats)
 
 
 def _pad_flat(x, block):

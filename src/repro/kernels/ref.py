@@ -7,10 +7,11 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def _ref_mask(S, *, causal, window, valid_len):
+def _ref_mask(S, T=None, *, causal, window, valid_len):
+    T = S if T is None else T
     qi = jnp.arange(S)[:, None]
-    kj = jnp.arange(S)[None, :]
-    mask = jnp.ones((S, S), bool)
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
     if causal:
         mask = kj <= qi
     if window is not None:
@@ -20,26 +21,29 @@ def _ref_mask(S, *, causal, window, valid_len):
     return mask
 
 
-def _ref_logits(q, k, scale, *, causal, window, valid_len):
-    """Masked (B,KV,G,S,S) logits + mask from grouped heads."""
+def _ref_logits(q, k, scale, *, causal, window, valid_len, bias=None):
+    """Masked (B,KV,G,Sq,Sk) logits + mask from grouped heads. ``bias``:
+    optional (B|1, Sq, Sk) additive logit bias (explicit masks)."""
     B, S, H, hd = q.shape
-    KV = k.shape[2]
+    T, KV = k.shape[1], k.shape[2]
     qg = q.reshape(B, S, KV, H // KV, hd)
     logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    mask = _ref_mask(S, causal=causal, window=window, valid_len=valid_len)
+    if bias is not None:
+        logits = logits + bias[:, None, None]
+    mask = _ref_mask(S, T, causal=causal, window=window, valid_len=valid_len)
     return jnp.where(mask[None, None, None], logits, NEG_INF), mask
 
 
 def flash_attention_fwd_ref(q, k, v, *, causal=True, window=None,
-                            valid_len=None, scale=None):
-    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (o: (B,S,H,hd), lse: (B,H,S)).
+                            valid_len=None, scale=None, bias=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (o: (B,Sq,H,hd), lse: (B,H,Sq)).
     GQA via head grouping; lse is the per-row logsumexp residual (0 for
     fully-masked rows, matching the kernel's guard)."""
     B, S, H, hd = q.shape
     scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
     logits, _ = _ref_logits(q, k, scale, causal=causal, window=window,
-                            valid_len=valid_len)
+                            valid_len=valid_len, bias=bias)
     m = jnp.max(logits, axis=-1)
     m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
     l = jnp.sum(jnp.exp(logits - m_safe[..., None]), axis=-1)
@@ -54,25 +58,26 @@ def flash_attention_fwd_ref(q, k, v, *, causal=True, window=None,
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None, valid_len=None,
-                        scale=None):
-    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd). GQA via head grouping."""
+                        scale=None, bias=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd). GQA via grouping."""
     return flash_attention_fwd_ref(q, k, v, causal=causal, window=window,
-                                   valid_len=valid_len, scale=scale)[0]
+                                   valid_len=valid_len, scale=scale,
+                                   bias=bias)[0]
 
 
-def _ref_p(q, k, lse, scale, *, causal, window, valid_len):
-    """(B,KV,G,S,S) attention weights recomputed from the stored lse."""
+def _ref_p(q, k, lse, scale, *, causal, window, valid_len, bias=None):
+    """(B,KV,G,Sq,Sk) attention weights recomputed from the stored lse."""
     B, S, H, hd = q.shape
     KV = k.shape[2]
     logits, mask = _ref_logits(q, k, scale, causal=causal, window=window,
-                               valid_len=valid_len)
+                               valid_len=valid_len, bias=bias)
     lseg = lse.reshape(B, KV, H // KV, S)
     return jnp.where(mask[None, None, None],
                      jnp.exp(logits - lseg[..., None]), 0.0)
 
 
 def flash_attention_bwd_ref(q, k, v, o, lse, do, *, causal=True, window=None,
-                            valid_len=None, scale=None):
+                            valid_len=None, scale=None, bias=None):
     """Dense-jnp backward from the stored lse: returns (dq, dk, dv).
 
     dP = dO Vᵀ, Δ = rowsum(dO ∘ O), dS = P ∘ (dP − Δ);
@@ -83,7 +88,7 @@ def flash_attention_bwd_ref(q, k, v, o, lse, do, *, causal=True, window=None,
     G = H // KV
     scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
     p = _ref_p(q, k, lse, scale, causal=causal, window=window,
-               valid_len=valid_len)
+               valid_len=valid_len, bias=bias)
     qg = q.reshape(B, S, KV, G, hd)
     dog = do.reshape(B, S, KV, G, hd).astype(jnp.float32)
     delta = jnp.einsum("bshd,bshd->bsh", o.astype(jnp.float32),
@@ -102,7 +107,8 @@ def flash_attention_bwd_ref(q, k, v, o, lse, do, *, causal=True, window=None,
 
 
 def flash_attention_jvp_ref(q, k, v, o, lse, qt, kt, vt, *, causal=True,
-                            window=None, valid_len=None, scale=None):
+                            window=None, valid_len=None, scale=None,
+                            bias=None):
     """Dense-jnp tangent from the stored lse: returns (ȯ, l̇se).
 
     Ṡ = scale·(Q̇Kᵀ + QK̇ᵀ), t = rowsum(P ∘ Ṡ);
@@ -113,7 +119,7 @@ def flash_attention_jvp_ref(q, k, v, o, lse, qt, kt, vt, *, causal=True,
     G = H // KV
     scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
     p = _ref_p(q, k, lse, scale, causal=causal, window=window,
-               valid_len=valid_len)
+               valid_len=valid_len, bias=bias)
     qg = q.reshape(B, S, KV, G, hd)
     qtg = qt.reshape(B, S, KV, G, hd)
     st = scale * (
@@ -131,6 +137,35 @@ def flash_attention_jvp_ref(q, k, v, o, lse, qt, kt, vt, *, causal=True,
     t_bsh = t.transpose(0, 3, 1, 2).reshape(B, S, H)
     ot = g.reshape(B, S, H, hd) - t_bsh[..., None] * o.astype(jnp.float32)
     return ot.astype(o.dtype), t.reshape(B, H, S)
+
+
+def flash_decode_ref(q, k, v, bias, *, scale=None):
+    """Dense decode oracle. q: (B,H,hd), k/v: (B,W,KV,hd), bias: (B|1,W)
+    additive mask row (0 attendable / NEG_INF masked) -> (B,H,hd).
+    Independent dense softmax — ground truth for the split-K kernel."""
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits + bias[:, None, None, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def flash_decode_paged_ref(q, k_pool, v_pool, page_table, bias, *, scale=None):
+    """Paged decode oracle: gather the logical KV in jnp (dense copy — the
+    thing the kernel avoids) then run the dense oracle."""
+    B = q.shape[0]
+    ps = k_pool.shape[1]
+    pages = jnp.maximum(page_table, 0)                       # (B, maxp)
+    k = k_pool[pages].reshape(B, -1, *k_pool.shape[2:])      # (B, maxp*ps, KV, hd)
+    v = v_pool[pages].reshape(B, -1, *v_pool.shape[2:])
+    return flash_decode_ref(q, k, v, bias, scale=scale)
 
 
 def bicgstab_x_update_ref(x, p, s, alpha, gamma):

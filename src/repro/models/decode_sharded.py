@@ -3,14 +3,18 @@
 For single-sequence long-context decode (long_500k: batch=1) neither the
 batch dim nor a small kv-head count can shard the KV cache, and GSPMD's only
 automatic option is to replicate/gather it. The right manual schedule shards
-the cache's *sequence slots* across the model axis: every chip attends over
-its local slots and the partials merge with a numerically-stable logsumexp
-combine — two tiny all-reduces of (B,H)-shaped stats + one (B,H,hd) partial
-sum, instead of moving the cache.
+the cache's *sequence slots* across the model axis: every chip runs the
+split-K flash-decode kernel (kernels/flash_decode.py) over its local slots
+— emitting the per-shard (o, m, l) contract via ``return_stats`` — and the
+partials merge with the same numerically-stable logsumexp combine the
+kernel uses between its own splits (the combine is associative): two tiny
+all-reduces of (B,H)-shaped stats + one (B,H,hd) partial sum, instead of
+moving the cache.
 
 This is a beyond-paper serving optimization (the paper trains MLPs); it
 composes with the rolling-buffer semantics because slot position p % W maps
-each chip to an interleaved slice of positions.
+each chip to an interleaved slice of positions, and the mask rides in the
+shared ``decode_bias`` row computed per shard from the local slot positions.
 """
 from __future__ import annotations
 
@@ -21,17 +25,39 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..kernels import ops as kops
 from .attention import KVCache, _split_heads
 from .layers import apply_rope, dense
 
 NEG_INF = -1e30
 
 
-def sharded_decode_attend(p, x, t, cache: KVCache, cfg, mesh, *, axis="model"):
+def combine_shard_stats(o, m, l, axis):
+    """Merge per-shard flash-decode partials across a mesh axis.
+
+    o: (B, H, hd) shard-local normalized output; m/l: (B, H) shard-local
+    running max / softmax mass (the ``flash_decode(return_stats=True)``
+    contract). Same logsumexp algebra as kernels.flash_decode.combine_splits,
+    expressed as collectives: m* = pmax(m), w = l·e^{m−m*}, then one psum
+    for the mass and one for the weighted outputs.
+    """
+    m_glob = jax.lax.pmax(m, axis)                            # (B, H)
+    m_safe = jnp.where(m_glob <= NEG_INF / 2, 0.0, m_glob)
+    w = l * jnp.exp(m - m_safe)                               # 0 when masked
+    l_glob = jax.lax.psum(w, axis)
+    o_glob = jax.lax.psum(o.astype(jnp.float32) * w[..., None], axis)
+    return o_glob / jnp.maximum(l_glob, 1e-20)[..., None]
+
+
+def sharded_decode_attend(p, x, t, cache: KVCache, cfg, mesh, *, axis="model",
+                          interpret=None):
     """One-token decode with the cache's W dim sharded over ``axis``.
 
     x: (B,1,d); cache.k/v: (B,W,KV,hd) sharded P(None, axis, None, None);
     cache.pos: (W,) sharded P(axis). Returns (y: (B,1,d), new cache).
+    Each shard runs the split-K flash-decode kernel on its local slots;
+    the bias row comes from ``decode_bias`` on the local slot positions, so
+    sharded and unsharded decode share one mask definition.
     """
     hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     B = x.shape[0]
@@ -51,6 +77,7 @@ def sharded_decode_attend(p, x, t, cache: KVCache, cfg, mesh, *, axis="model"):
         mesh=mesh,
         in_specs=(P(), P(), P(), P(None, axis, None, None), P(None, axis, None, None), P(axis)),
         out_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P(axis)),
+        check_rep=False,  # pallas_call has no replication rule
     )
     def attend(q, k_new, v_new, k_sh, v_sh, pos_sh):
         # local slot index of the global rolling slot t % W, if it lands here
@@ -67,25 +94,10 @@ def sharded_decode_attend(p, x, t, cache: KVCache, cfg, mesh, *, axis="model"):
         v_sh = jnp.where(mine, v_upd, v_sh)
         pos_sh = jnp.where(mine, pos_upd, pos_sh)
 
-        valid = jnp.logical_and(pos_sh >= 0, pos_sh <= t)
-        if cfg.sliding_window:
-            valid = jnp.logical_and(valid, pos_sh > t - cfg.sliding_window)
-        G = H // KV
-        qg = q.reshape(B, 1, KV, G, hd)
-        logits = jnp.einsum("bskgh,btkh->bkgst", qg, k_sh,
-                            preferred_element_type=jnp.float32)
-        logits = logits / jnp.sqrt(hd) + jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
-        m_loc = jnp.max(logits, axis=-1)                       # (B,KV,G,1)
-        m_glob = jax.lax.pmax(m_loc, axis)
-        m_safe = jnp.where(m_glob <= NEG_INF / 2, 0.0, m_glob)
-        e = jnp.exp(logits - m_safe[..., None])
-        e = jnp.where(valid[None, None, None, None, :], e, 0.0)
-        s_loc = jnp.sum(e, axis=-1)                            # (B,KV,G,1)
-        o_loc = jnp.einsum("bkgst,btkh->bskgh", e.astype(v_sh.dtype), v_sh,
-                           preferred_element_type=jnp.float32)
-        s = jax.lax.psum(s_loc, axis)
-        o = jax.lax.psum(o_loc, axis)
-        out = o / jnp.maximum(s, 1e-20).transpose(0, 3, 1, 2)[..., None]
+        bias = kops.decode_bias(pos_sh, t, window=cfg.sliding_window)
+        o, m, l = kops.flash_decode(q[:, 0], k_sh, v_sh, bias,
+                                    interpret=interpret, return_stats=True)
+        out = combine_shard_stats(o, m, l, axis)
         return out.reshape(B, 1, H * hd).astype(q.dtype), k_sh, v_sh, pos_sh
 
     out, new_k, new_v, new_pos = attend(q, k, v, cache.k, cache.v, cache.pos)

@@ -1,0 +1,292 @@
+"""Paged KV cache: a shared page pool + per-slot page tables.
+
+The dense ``KVCache`` keeps a per-sequence ``(B, W, KV, hd)`` buffer sized
+for the *longest* sequence — thousands of concurrent ragged-length requests
+pay worst-case HBM each. Here K/V live in one physical page pool shared by
+every slot:
+
+  * ``k_pool`` / ``v_pool``: (L, P, page_size, KV, hd) — P physical pages
+    per layer (stacked over the L decoder layers so the transformer's layer
+    scan can carry one (P, page_size, KV, hd) slice per step). Page 0 is
+    the reserved *null page*: writes from inactive/unmapped slots are
+    routed there and reads of it are always bias-masked, so scatter
+    collisions on it are harmless garbage.
+  * ``page_table``: (B, max_pages) int32 — logical page j of slot b lives
+    in physical page ``page_table[b, j]`` (-1 = unmapped). Logical token i
+    sits at slot i % page_size of logical page i // page_size. The table is
+    shared by every layer (all layers page identically).
+  * ``seq_len``: (B,) tokens written so far per slot.
+  * ``free_pages``/``n_free``: a functional stack of free physical page ids
+    (``free_pages[:n_free]`` free) so allocation/release are jit-able
+    fixed-shape scans.
+
+The split-K decode kernel (kernels/flash_decode.py::flash_decode_paged)
+scalar-prefetches the page table and gathers pages in its K/V index maps —
+no dense per-sequence copy of the cache ever exists. Under a sliding window
+pages that roll fully out of the live range are freed (at most one per slot
+per decode step; prefill only maps pages overlapping the live range), so
+steady-state HBM is ~window tokens per live slot regardless of max_len.
+
+Allocation invariant maintained across alloc/advance/release: every
+physical page > 0 is either on the free stack or mapped by exactly one
+(slot, logical page); ``check_invariants`` asserts it host-side in tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, _sdpa, _split_heads
+from .layers import apply_rope, dense
+
+__all__ = [
+    "PagedKVCache", "init_paged_cache", "alloc_prefill", "alloc_decode_page",
+    "advance_and_free", "release_slots", "write_prefill_kv",
+    "paged_decode_attend", "pages_needed", "check_invariants",
+]
+
+
+class PagedKVCache(NamedTuple):
+    k_pool: jax.Array       # (L, P, ps, KV, hd)
+    v_pool: jax.Array       # (L, P, ps, KV, hd)
+    page_table: jax.Array   # (B, max_pages) int32, -1 = unmapped
+    seq_len: jax.Array      # (B,) int32 tokens written per slot
+    free_pages: jax.Array   # (P,) int32 stack, [:n_free] free
+    n_free: jax.Array       # () int32
+
+    @property
+    def page_size(self):
+        return self.k_pool.shape[2]
+
+    @property
+    def max_pages(self):
+        return self.page_table.shape[1]
+
+
+def init_paged_cache(cfg, n_layers, batch, max_len, n_pages, dtype,
+                     page_size: int = 128) -> PagedKVCache:
+    """Pool of ``n_pages`` physical pages (page 0 reserved as the null
+    page), empty tables for ``batch`` slots covering ``max_len`` logical
+    tokens."""
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    maxp = -(-max_len // page_size)
+    return PagedKVCache(
+        k_pool=jnp.zeros((n_layers, n_pages, page_size, KV, hd), dtype),
+        v_pool=jnp.zeros((n_layers, n_pages, page_size, KV, hd), dtype),
+        page_table=jnp.full((batch, maxp), -1, jnp.int32),
+        seq_len=jnp.zeros((batch,), jnp.int32),
+        # stack of free ids 1..P-1 (0 = null page, never allocated);
+        # capacity P so the push index n_free never collides with a live id
+        free_pages=jnp.concatenate(
+            [jnp.arange(1, n_pages, dtype=jnp.int32),
+             jnp.zeros((1,), jnp.int32)]),
+        n_free=jnp.asarray(n_pages - 1, jnp.int32),
+    )
+
+
+def pages_needed(length: int, page_size: int, window: Optional[int]) -> int:
+    """Pages a prefill of ``length`` maps (only those overlapping the live
+    range [length - window, length) under a sliding window)."""
+    hi = -(-length // page_size)
+    lo = max(0, length - window) // page_size if window else 0
+    return hi - lo
+
+
+def _pop_scan(stack, n, take):
+    """Pop one page per True in ``take`` (flat scan, fixed shape).
+    Returns (stack, n, pids) with pid = -1 where take is False."""
+    def body(carry, t):
+        n = carry
+        pid = jnp.where(t, stack[jnp.maximum(n - 1, 0)], -1)
+        return jnp.where(t, n - 1, n), pid
+    n, pids = jax.lax.scan(body, n, take)
+    return stack, n, pids
+
+
+def alloc_prefill(cache: PagedKVCache, lengths, admit,
+                  window: Optional[int] = None) -> PagedKVCache:
+    """(Re)build the page tables of admitted slots for a prefill of
+    ``lengths`` tokens, popping pages from the free stack. ``admit``: (B,)
+    bool; non-admitted rows are untouched. Under a sliding window only the
+    pages overlapping the live range [lengths - window, lengths) are mapped
+    (``pages_needed``). Admitted slots must have been ``release_slots``-ed
+    first (their rows are assumed unmapped); the caller checks capacity
+    host-side (``n_free`` vs ``pages_needed``)."""
+    B, maxp = cache.page_table.shape
+    ps = cache.page_size
+    lengths = jnp.asarray(lengths, jnp.int32)
+    j = jnp.arange(maxp, dtype=jnp.int32)[None]
+    need = jnp.logical_and(j * ps < lengths[:, None],
+                           admit[:, None])                   # (B, maxp)
+    if window is not None:
+        live_lo = jnp.maximum(lengths - window, 0)[:, None]
+        need = jnp.logical_and(need, (j + 1) * ps > live_lo)
+    stack, n, pids = _pop_scan(cache.free_pages, cache.n_free,
+                               need.reshape(-1))
+    tbl = jnp.where(need, pids.reshape(B, maxp), cache.page_table)
+    seq_len = jnp.where(admit, lengths, cache.seq_len)
+    return cache._replace(page_table=tbl, seq_len=seq_len,
+                          free_pages=stack, n_free=n)
+
+
+def alloc_decode_page(cache: PagedKVCache, active) -> PagedKVCache:
+    """Map the page holding position ``seq_len`` for every active slot that
+    crossed a page boundary (at most one pop per slot per step)."""
+    B, maxp = cache.page_table.shape
+    ps = cache.page_size
+    jnew = cache.seq_len // ps                                # (B,)
+    need = jnp.logical_and(
+        active,
+        jnp.logical_and(cache.seq_len % ps == 0, jnew < maxp))
+    need = jnp.logical_and(
+        need, cache.page_table[jnp.arange(B), jnp.minimum(jnew, maxp - 1)] < 0)
+    stack, n, pids = _pop_scan(cache.free_pages, cache.n_free, need)
+    tbl = cache.page_table.at[jnp.arange(B), jnp.minimum(jnew, maxp - 1)].set(
+        jnp.where(need, pids, cache.page_table[jnp.arange(B),
+                                               jnp.minimum(jnew, maxp - 1)]))
+    return cache._replace(page_table=tbl, free_pages=stack, n_free=n)
+
+
+def advance_and_free(cache: PagedKVCache, active,
+                     window: Optional[int]) -> PagedKVCache:
+    """seq_len += active; under a sliding window, free the (at most one)
+    page per slot that just rolled fully out of the live range
+    [seq_len - window, seq_len)."""
+    sl = cache.seq_len + active.astype(jnp.int32)
+    cache = cache._replace(seq_len=sl)
+    if window is None:
+        return cache
+    B, maxp = cache.page_table.shape
+    ps = cache.page_size
+    fl = sl - window                                          # first live pos
+    jdead = fl // ps - 1
+    can = jnp.logical_and(active, jnp.logical_and(fl > 0, fl % ps == 0))
+    jdead = jnp.clip(jdead, 0, maxp - 1)
+    pid = cache.page_table[jnp.arange(B), jdead]
+    do = jnp.logical_and(can, pid >= 0)
+
+    def body(carry, inp):
+        stack, n = carry
+        d, p = inp
+        stack = stack.at[jnp.where(d, n, cache.free_pages.shape[0] - 1)].set(
+            jnp.where(d, p, stack[-1]))
+        return (stack, jnp.where(d, n + 1, n)), 0
+
+    (stack, n), _ = jax.lax.scan(body, (cache.free_pages, cache.n_free),
+                                 (do, pid))
+    tbl = cache.page_table.at[jnp.arange(B), jdead].set(
+        jnp.where(do, -1, pid))
+    return cache._replace(page_table=tbl, free_pages=stack, n_free=n)
+
+
+def release_slots(cache: PagedKVCache, mask) -> PagedKVCache:
+    """Return every page of the masked slots to the free stack and clear
+    their rows (retire finished sequences / make room for admission)."""
+    B, maxp = cache.page_table.shape
+    rel = jnp.logical_and(mask[:, None], cache.page_table >= 0)  # (B, maxp)
+
+    def body(carry, inp):
+        stack, n = carry
+        d, p = inp
+        stack = stack.at[jnp.where(d, n, cache.free_pages.shape[0] - 1)].set(
+            jnp.where(d, p, stack[-1]))
+        return (stack, jnp.where(d, n + 1, n)), 0
+
+    (stack, n), _ = jax.lax.scan(
+        body, (cache.free_pages, cache.n_free),
+        (rel.reshape(-1), cache.page_table.reshape(-1)))
+    tbl = jnp.where(mask[:, None], -1, cache.page_table)
+    sl = jnp.where(mask, 0, cache.seq_len)
+    return cache._replace(page_table=tbl, seq_len=sl,
+                          free_pages=stack, n_free=n)
+
+
+# ------------------------------------------------------------- pool writes --
+def _write_positions(k_pool_l, v_pool_l, page_table, pos, k, v, valid):
+    """Scatter rows k/v: (B, T, KV, hd) at logical positions pos: (B, T)
+    into one layer's pools. Invalid writes route to null page 0 (their
+    reads are always bias-masked, so garbage there is harmless)."""
+    B, T = pos.shape
+    ps = k_pool_l.shape[1]
+    page = jnp.where(valid,
+                     page_table[jnp.arange(B)[:, None], pos // ps], 0)
+    page = jnp.maximum(page, 0)                               # unmapped -> null
+    page = jnp.where(valid, page, 0)
+    slot = pos % ps
+    flat = (page.reshape(-1), slot.reshape(-1))
+    k_pool_l = k_pool_l.at[flat].set(k.reshape(B * T, *k.shape[2:]))
+    v_pool_l = v_pool_l.at[flat].set(v.reshape(B * T, *v.shape[2:]))
+    return k_pool_l, v_pool_l
+
+
+def write_prefill_kv(k_pool_l, v_pool_l, page_table, k, v, lengths):
+    """Prefill one layer: write k/v: (B, S, KV, hd) for logical positions
+    [0, lengths_b) directly into the pages (positions >= lengths_b, or
+    below a freed window page, hit unmapped entries and fall through to the
+    null page)."""
+    B, S = k.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    valid = pos < jnp.asarray(lengths, jnp.int32)[:, None]
+    return _write_positions(k_pool_l, v_pool_l, page_table, pos, k, v, valid)
+
+
+# ----------------------------------------------------------------- attend ---
+def paged_decode_attend(p, x, cache_kv, page_table, seq_len, cfg, *,
+                        active=None, interpret=None):
+    """One-token decode for one layer against the paged pool.
+
+    x: (B, 1, d); ``cache_kv``: (k_pool_l, v_pool_l) this layer's
+    (P, ps, KV, hd) slices; ``seq_len``: (B,) position being written (the
+    page for it must already be mapped — ``alloc_decode_page``). Returns
+    (y, (k_pool_l, v_pool_l)). Under ``cfg.use_flash_attention`` the attend
+    runs the scalar-prefetch paged kernel; otherwise the jnp gather oracle
+    (dense copy) — parity path only.
+    """
+    from ..kernels import ops as kops
+    from ..kernels import ref as kref
+
+    k_pool_l, v_pool_l = cache_kv
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    B = x.shape[0]
+    ps = k_pool_l.shape[1]
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k = _split_heads(dense(p["wk"], x), KV, hd)
+    v = _split_heads(dense(p["wv"], x), KV, hd)
+    pos_bt = seq_len[:, None].astype(jnp.int32)               # (B, 1)
+    q = apply_rope(q, pos_bt, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, pos_bt, rope_fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    if active is None:
+        active = jnp.ones((B,), bool)
+    k_pool_l, v_pool_l = _write_positions(
+        k_pool_l, v_pool_l, page_table, pos_bt, k, v, active[:, None])
+    sl_now = seq_len + active.astype(jnp.int32)               # incl. this token
+    bias = kops.paged_bias(page_table, sl_now, ps, window=cfg.sliding_window)
+    bias = jnp.where(active[:, None], bias, NEG_INF)
+    if cfg.use_flash_attention:
+        out = kops.flash_decode_paged(q[:, 0], k_pool_l, v_pool_l,
+                                      page_table, bias, interpret=interpret)
+    else:
+        out = kref.flash_decode_paged_ref(q[:, 0], k_pool_l, v_pool_l,
+                                          page_table, bias)
+    y = dense(p["wo"], out[:, None].reshape(B, 1, H * hd))
+    return y, (k_pool_l, v_pool_l)
+
+
+# ------------------------------------------------------------- diagnostics --
+def check_invariants(cache: PagedKVCache):
+    """Host-side: every page > 0 is free xor mapped exactly once."""
+    import numpy as np
+
+    tbl = np.asarray(cache.page_table)
+    free = np.asarray(cache.free_pages[: int(cache.n_free)])
+    P = cache.k_pool.shape[1]
+    mapped = set(tbl[tbl >= 0].tolist())
+    free_s = set(free.tolist())
+    assert 0 not in mapped, "null page mapped"
+    assert len(mapped) == int((tbl >= 0).sum()), "page double-mapped"
+    assert len(free_s) == len(free), "free stack duplicate"
+    assert not mapped & free_s, "page both mapped and free"
+    leaked = set(range(1, P)) - mapped - free_s
+    assert not leaked, f"leaked pages {leaked}"

@@ -27,8 +27,10 @@ from .attention import (
     attend_full_with_cache,
     causal_mask,
     decode_attend,
+    decode_attend_ragged,
     decode_cross_attend,
     encoder_attend,
+    init_kv_cache,
     _sdpa,
     _split_heads,
 )
@@ -63,6 +65,18 @@ class ModelApi(NamedTuple):
     prefill: Callable            # (params, batch, max_len) -> (logits, cache)
     decode_step: Callable        # (params, token(B,1), t, cache) -> (logits, cache)
     init_cache: Callable         # (batch_size, max_len) -> cache
+    # Continuous-batching / paged serving (dense-decoder stacks only; None
+    # elsewhere). Ragged: every batch slot sits at its own decode position.
+    decode_step_ragged: Optional[Callable] = None
+    # (params, token(B,1), t(B,), cache, active(B,)) -> (logits, cache)
+    init_cache_ragged: Optional[Callable] = None
+    # (batch_size, max_len) -> cache with per-slot pos rows
+    decode_step_paged: Optional[Callable] = None
+    # (params, token(B,1), paged_cache, active(B,)) -> (logits, paged_cache)
+    init_cache_paged: Optional[Callable] = None
+    # (batch_size, max_len, n_pages, page_size) -> PagedKVCache
+    prefill_paged: Optional[Callable] = None
+    # (params, batch(1 prompt), paged_cache, slot) -> (logits, paged_cache)
 
 
 # ------------------------------------------------------------------ units --
@@ -183,18 +197,34 @@ def _unit_decode(unit, x, t, caches, cfg):
     return x, new_caches
 
 
-def _unit_cache_zeros(cfg, batch, max_len, dtype):
+def _unit_decode_ragged(unit, x, t, caches, cfg, active):
+    """Per-slot decode of one unit (attn/moe blocks only — the continuous
+    batching path is gated to dense-decoder stacks)."""
+    new_caches = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        name = f"b{j}_{kind}"
+        p = unit[name]
+        c = caches[name]
+        h = apply_norm(p["norm1"], x, cfg.norm_eps)
+        a, new_caches[name] = decode_attend_ragged(p["attn"], h, t, c, cfg,
+                                                   active=active)
+        x = x + a
+        h = apply_norm(p["norm2"], x, cfg.norm_eps)
+        if kind == "attn":
+            x = x + apply_mlp(p["mlp"], h)
+        else:
+            mo, _ = apply_moe(p["moe"], h, cfg)
+            x = x + mo
+    return x, new_caches
+
+
+def _unit_cache_zeros(cfg, batch, max_len, dtype, *, ragged=False):
     caches = {}
-    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     for j, kind in enumerate(cfg.block_pattern):
         name = f"b{j}_{kind}"
         if kind in ("attn", "moe"):
-            KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-            caches[name] = KVCache(
-                k=jnp.zeros((batch, W, KV, hd), dtype),
-                v=jnp.zeros((batch, W, KV, hd), dtype),
-                pos=jnp.full((W,), -1, jnp.int32),
-            )
+            caches[name] = init_kv_cache(cfg, batch, max_len, dtype,
+                                         ragged=ragged)
         elif kind == "mamba":
             caches[name] = init_mamba_cache(cfg, batch, dtype)
         elif kind == "mlstm":
@@ -456,7 +486,107 @@ def build_model(cfg, *, remat: bool = False) -> ModelApi:
             x, new_caches = _decoder_backbone_decode(params, x, t, caches, cfg)
         return head(params, x), new_caches
 
-    return ModelApi(cfg, init, loss_fn, logits_fn, out_loss_fn, prefill, decode_step, init_cache)
+    # -------------------------- continuous-batching / paged serving paths --
+    # Gated to plain decoder stacks (one attn/moe block per scanned unit,
+    # no vision prefix): per-slot decode positions and the shared page pool
+    # only make sense where every layer's cache is a KVCache.
+    supports_serving = (
+        not is_hybrid
+        and cfg.family != "vlm"
+        and len(cfg.block_pattern) == 1
+        and cfg.block_pattern[0] in ("attn", "moe")
+    )
+    decode_step_ragged = init_cache_ragged = None
+    decode_step_paged = init_cache_paged = prefill_paged = None
+    if supports_serving:
+        from . import kv_paged as kvp
+
+        bname = f"b0_{cfg.block_pattern[0]}"
+
+        def init_cache_ragged(batch_size, max_len):
+            unit = _unit_cache_zeros(cfg, batch_size, max_len, dtype,
+                                     ragged=True)
+            return _stack(unit, n_units)
+
+        def decode_step_ragged(params, token, t, caches, active=None):
+            x = embed(params["embed"], token)
+
+            def body(xx, xs):
+                unit, c = xs
+                xx, nc = _unit_decode_ragged(unit, xx, t, c, cfg, active)
+                return xx, nc
+
+            x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+            return head(params, x), new_caches
+
+        def init_cache_paged(batch_size, max_len, n_pages, page_size=128):
+            return kvp.init_paged_cache(cfg, n_units, batch_size, max_len,
+                                        n_pages, dtype, page_size)
+
+        def prefill_paged(params, batch, cache, slot):
+            """Admit one prompt (batch["tokens"]: (1, S)) into ``slot``:
+            run the dense prefill, map pages for the slot, and scatter the
+            per-layer K/V into the pool in logical order. The slot's table
+            row must be unmapped (released). Returns (last-token logits,
+            cache)."""
+            S = batch["tokens"].shape[1]
+            logits, dcaches = prefill(params, batch, S)
+            kv = dcaches[bname]                  # k: (L, 1, W, KV, hd)
+            W = kv.k.shape[2]
+            B = cache.page_table.shape[0]
+            admit = jnp.arange(B) == slot
+            lengths = jnp.where(admit, S, 0)
+            cache = kvp.alloc_prefill(cache, lengths, admit,
+                                      window=cfg.sliding_window)
+            row = cache.page_table[slot][None]   # (1, max_pages)
+            # rolling slot of logical position i is i % W; positions below
+            # the live window alias newer ones but land on unmapped logical
+            # pages (routed to the null page), so the gather is safe
+            idx = jnp.arange(S) % W
+            kl, vl = kv.k[:, :, idx], kv.v[:, :, idx]     # (L, 1, S, KV, hd)
+            ln = jnp.full((1,), S, jnp.int32)
+            kps, vps = jax.vmap(
+                lambda kp, vp, k1, v1: kvp.write_prefill_kv(
+                    kp, vp, row, k1, v1, ln)
+            )(cache.k_pool, cache.v_pool, kl, vl)
+            return logits, cache._replace(k_pool=kps, v_pool=vps)
+
+        def decode_step_paged(params, token, cache, active=None):
+            if active is None:
+                active = jnp.ones((token.shape[0],), bool)
+            cache = kvp.alloc_decode_page(cache, active)
+            x = embed(params["embed"], token)
+
+            def body(xx, xs):
+                unit, kp, vp = xs
+                p = unit[bname]
+                h = apply_norm(p["norm1"], xx, cfg.norm_eps)
+                a, (kp, vp) = kvp.paged_decode_attend(
+                    p["attn"], h, (kp, vp), cache.page_table, cache.seq_len,
+                    cfg, active=active)
+                xx = xx + a
+                h = apply_norm(p["norm2"], xx, cfg.norm_eps)
+                if cfg.block_pattern[0] == "attn":
+                    xx = xx + apply_mlp(p["mlp"], h)
+                else:
+                    mo, _ = apply_moe(p["moe"], h, cfg)
+                    xx = xx + mo
+                return xx, (kp, vp)
+
+            x, (kps, vps) = jax.lax.scan(
+                body, x, (params["blocks"], cache.k_pool, cache.v_pool))
+            cache = cache._replace(k_pool=kps, v_pool=vps)
+            cache = kvp.advance_and_free(cache, active,
+                                         window=cfg.sliding_window)
+            return head(params, x), cache
+
+    return ModelApi(cfg, init, loss_fn, logits_fn, out_loss_fn, prefill,
+                    decode_step, init_cache,
+                    decode_step_ragged=decode_step_ragged,
+                    init_cache_ragged=init_cache_ragged,
+                    decode_step_paged=decode_step_paged,
+                    init_cache_paged=init_cache_paged,
+                    prefill_paged=prefill_paged)
 
 
 def _ce_loss(logits, batch):

@@ -18,38 +18,45 @@ SCRIPT = textwrap.dedent("""
     from repro.models.attention import KVCache, attn_init, decode_attend, init_kv_cache
     from repro.models.decode_sharded import sharded_decode_attend
 
-    cfg = get_smoke_config("granite-3-8b")       # GQA kv=2 < 8 shards
+    base = get_smoke_config("granite-3-8b")      # GQA kv=2 < 8 shards
     mesh = jax.make_mesh((8,), ("model",))
     dtype = jnp.float32
-    p = attn_init(jax.random.PRNGKey(0), cfg, dtype)
-    B, W = 2, 64
-    cache = init_kv_cache(cfg, B, W, dtype)
-    # pre-fill some slots with random K/V at positions 0..39
-    ks = jax.random.split(jax.random.PRNGKey(1), 3)
-    npos = 40
-    cache = KVCache(
-        k=cache.k.at[:, :npos].set(jax.random.normal(ks[0], (B, npos, cfg.n_kv_heads, cfg.resolved_head_dim))),
-        v=cache.v.at[:, :npos].set(jax.random.normal(ks[1], (B, npos, cfg.n_kv_heads, cfg.resolved_head_dim))),
-        pos=cache.pos.at[:npos].set(jnp.arange(npos)),
-    )
-    x = jax.random.normal(ks[2], (B, 1, cfg.d_model), dtype)
-    t = jnp.asarray(npos, jnp.int32)
+    for window in (None, 24):                    # rolling + sliding-window bias
+      cfg = base.replace(sliding_window=window)
+      p = attn_init(jax.random.PRNGKey(0), cfg, dtype)
+      B, W = 2, 64
+      cache = init_kv_cache(cfg, B, W, dtype)
+      # pre-fill with K/V for positions 0..39 at their rolling slots p % Wc
+      # (the windowed cache is only Wc = window slots wide)
+      ks = jax.random.split(jax.random.PRNGKey(1), 3)
+      npos = 40
+      Wc = cache.k.shape[1]
+      fill = min(npos, Wc)
+      ppos = jnp.arange(npos - fill, npos)
+      slots = ppos % Wc
+      cache = KVCache(
+          k=cache.k.at[:, slots].set(jax.random.normal(ks[0], (B, fill, cfg.n_kv_heads, cfg.resolved_head_dim))),
+          v=cache.v.at[:, slots].set(jax.random.normal(ks[1], (B, fill, cfg.n_kv_heads, cfg.resolved_head_dim))),
+          pos=cache.pos.at[slots].set(ppos),
+      )
+      x = jax.random.normal(ks[2], (B, 1, cfg.d_model), dtype)
+      t = jnp.asarray(npos, jnp.int32)
 
-    y_ref, c_ref = decode_attend(p, x, t, cache, cfg)
+      y_ref, c_ref = decode_attend(p, x, t, cache, cfg)
 
-    sharded_cache = jax.device_put(cache, NamedSharding(mesh, P()))
-    sharded_cache = KVCache(
-        jax.device_put(cache.k, NamedSharding(mesh, P(None, "model"))),
-        jax.device_put(cache.v, NamedSharding(mesh, P(None, "model"))),
-        jax.device_put(cache.pos, NamedSharding(mesh, P("model"))),
-    )
-    y_sh, c_sh = jax.jit(
-        lambda p, x, c: sharded_decode_attend(p, x, t, c, cfg, mesh)
-    )(p, x, sharded_cache)
+      sharded_cache = KVCache(
+          jax.device_put(cache.k, NamedSharding(mesh, P(None, "model"))),
+          jax.device_put(cache.v, NamedSharding(mesh, P(None, "model"))),
+          jax.device_put(cache.pos, NamedSharding(mesh, P("model"))),
+      )
+      y_sh, c_sh = jax.jit(
+          lambda p, x, c: sharded_decode_attend(p, x, t, c, cfg, mesh)
+      )(p, x, sharded_cache)
 
-    np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(c_sh.k), np.asarray(c_ref.k), rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(c_sh.pos), np.asarray(c_ref.pos))
+      np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+      np.testing.assert_allclose(np.asarray(c_sh.k), np.asarray(c_ref.k), rtol=1e-5, atol=1e-6)
+      np.testing.assert_allclose(np.asarray(c_sh.pos), np.asarray(c_ref.pos))
+      print("OK", window)
     print("OK")
 """)
 

@@ -1,0 +1,222 @@
+"""Flash kernels on the paths PR 4 left to `_sdpa`: explicit masks (as an
+additive logit bias operand) and cross-attention (mismatched q/kv lengths
+via independent pad-and-mask on both axes).
+
+Kernel level: every raw pass (fwd/bwd/jvp) and every AD route through
+``flash_mha`` (grad, linearize, second-order forward-over-reverse) against
+the jnp oracles in kernels/ref.py, with and without bias, at aligned and
+non-aligned Sq != Sk. Model level: ``attend_full`` with cfg.use_flash_attention
+must match the `_sdpa` path bit-for-tolerance on cross_kv and head-broadcast
+mask inputs — `_sdpa` is the parity oracle only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops, ref
+from repro.kernels.flash_ad import second_order_tangents
+from repro.kernels.ref import NEG_INF
+from repro.models import attention as A
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32) * 0.5
+
+
+def _qkv(seed, B, Sq, Sk, H, KV, hd):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (_rand(ks[0], B, Sq, H, hd), _rand(ks[1], B, Sk, KV, hd),
+            _rand(ks[2], B, Sk, KV, hd))
+
+
+def _bias(seed, bb, Sq, Sk, keep=0.75):
+    """Random (bb, Sq, Sk) 0/NEG_INF bias with a guaranteed-valid column."""
+    m = jax.random.bernoulli(jax.random.PRNGKey(seed), keep, (bb, Sq, Sk))
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32).at[:, :, 0].set(0.0)
+
+
+# --------------------------------------------------- raw kernels + bias ----
+@pytest.mark.parametrize("bias_batch", [1, 2])
+def test_raw_passes_with_bias_match_ref(bias_batch):
+    B, Sq, Sk, H, KV, hd = 2, 128, 128, 4, 2, 32
+    q, k, v = _qkv(0, B, Sq, Sk, H, KV, hd)
+    bias = _bias(7, bias_batch, Sq, Sk)
+    kw = dict(causal=False, window=None, bias=bias)
+
+    o, lse = ops.flash_attention_fwd(q, k, v, interpret=True, **kw)
+    o_r, lse_r = ref.flash_attention_fwd_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_r),
+                               rtol=2e-5, atol=2e-5)
+
+    do = _rand(jax.random.PRNGKey(3), B, Sq, H, hd)
+    grads = ops.flash_attention_bwd(q, k, v, o_r, lse_r, do,
+                                    interpret=True, **kw)
+    grads_r = ref.flash_attention_bwd_ref(q, k, v, o_r, lse_r, do, **kw)
+    for g, g_r in zip(grads, grads_r):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_r),
+                                   rtol=2e-4, atol=2e-4)
+
+    qt, kt, vt = _qkv(11, B, Sq, Sk, H, KV, hd)
+    ot, lt = ops.flash_attention_jvp(q, k, v, o_r, lse_r, qt, kt, vt,
+                                     interpret=True, **kw)
+    ot_r, lt_r = ref.flash_attention_jvp_ref(q, k, v, o_r, lse_r, qt, kt, vt,
+                                             **kw)
+    np.testing.assert_allclose(np.asarray(ot), np.asarray(ot_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lt), np.asarray(lt_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------- cross lengths through AD ----
+@pytest.mark.parametrize("Sq,Sk", [(17, 43), (128, 64)])
+def test_cross_length_fwd_and_grad(Sq, Sk):
+    B, H, KV, hd = 2, 4, 2, 16
+    q, k, v = _qkv(1, B, Sq, Sk, H, KV, hd)
+
+    o = ops.flash_attention(q, k, v, causal=False, window=None, interpret=True)
+    o_r = ref.flash_attention_ref(q, k, v, causal=False, window=None)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(jnp.sin(fn(q, k, v)))
+
+    g = jax.grad(loss(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=False, window=None, interpret=True)),
+        argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(loss(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=False, window=None)), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, g_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("Sq,Sk", [(128, 128), (10, 23)])
+def test_bias_grad_through_flash_mha(Sq, Sk):
+    B, H, KV, hd = 2, 4, 2, 16
+    q, k, v = _qkv(2, B, Sq, Sk, H, KV, hd)
+    bias = _bias(3, B, Sq, Sk)
+
+    def fl(q, k, v):
+        return ops.flash_attention(q, k, v, causal=False, window=None,
+                                   bias=bias, interpret=True)
+
+    def rf(q, k, v):
+        return ref.flash_attention_ref(q, k, v, causal=False, window=None,
+                                       bias=bias)
+
+    np.testing.assert_allclose(np.asarray(fl(q, k, v)),
+                               np.asarray(rf(q, k, v)),
+                               rtol=2e-5, atol=2e-5)
+    gf = jax.grad(lambda q, k, v: jnp.sum(jnp.sin(fl(q, k, v))),
+                  argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: jnp.sum(jnp.sin(rf(q, k, v))),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_bias_linearize_and_second_order():
+    B, Sq, Sk, H, KV, hd = 2, 64, 96, 4, 2, 16
+    q, k, v = _qkv(4, B, Sq, Sk, H, KV, hd)
+    qt, kt, vt = _qkv(5, B, Sq, Sk, H, KV, hd)
+    bias = _bias(5, 1, Sq, Sk, keep=0.8)
+
+    def fl(q, k, v):
+        return ops.flash_attention(q, k, v, causal=False, window=None,
+                                   bias=bias, interpret=True)
+
+    def rf(q, k, v):
+        return ref.flash_attention_ref(q, k, v, causal=False, window=None,
+                                       bias=bias)
+
+    _, jf = jax.linearize(fl, q, k, v)
+    _, jr = jax.linearize(rf, q, k, v)
+    np.testing.assert_allclose(np.asarray(jf(qt, kt, vt)),
+                               np.asarray(jr(qt, kt, vt)),
+                               rtol=2e-4, atol=2e-4)
+
+    def gq(fn):
+        return lambda qq: jax.grad(
+            lambda q_: jnp.sum(jnp.sin(fn(q_, k, v))))(qq)
+
+    with second_order_tangents():
+        hf = jax.jvp(gq(fl), (q,), (qt,))
+    hr = jax.jvp(gq(rf), (q,), (qt,))
+    for a, b in zip(hf, hr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------- attend_full routing ----
+def _attn_setup(seed=0):
+    cfg = ModelConfig(arch_id="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=32)
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    p = {"wq": {"w": _rand(ks[0], 64, 64)},
+         "wo": {"w": _rand(ks[1], 64, 64)},
+         "wk": {"w": _rand(ks[2], 64, cfg.n_kv_heads * hd)},
+         "wv": {"w": _rand(ks[3], 64, cfg.n_kv_heads * hd)}}
+    B, S, T = 2, 13, 29
+    x = _rand(ks[4], B, S, 64)
+    kv = (_rand(ks[5], B, T, cfg.n_kv_heads, hd),
+          _rand(ks[5], B, T, cfg.n_kv_heads, hd))
+    return cfg, p, x, jnp.arange(S)[None], kv
+
+
+def test_attend_full_cross_kv_flash_matches_sdpa():
+    cfg, p, x, pos, kv = _attn_setup()
+    cfgf = cfg.replace(use_flash_attention=True)
+    y0 = A.attend_full(p, x, pos, cfg, cross_kv=kv)
+    y1 = A.attend_full(p, x, pos, cfgf, cross_kv=kv)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("cross", [False, True])
+def test_attend_full_explicit_mask_flash_matches_sdpa(cross):
+    cfg, p, x, pos, kv = _attn_setup()
+    cfgf = cfg.replace(use_flash_attention=True)
+    B, S = x.shape[:2]
+    T = kv[0].shape[1] if cross else S
+    mask = jax.random.bernoulli(jax.random.PRNGKey(9), 0.7, (B, 1, S, T))
+    mask = mask.at[:, :, :, 0].set(True)
+    kw = dict(mask=mask, cross_kv=kv if cross else None)
+    y0 = A.attend_full(p, x, pos, cfg, **kw)
+    y1 = A.attend_full(p, x, pos, cfgf, **kw)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attend_full_mask_route_grad_matches_sdpa():
+    cfg, p, x, pos, _ = _attn_setup()
+    cfgf = cfg.replace(use_flash_attention=True)
+    B, S = x.shape[:2]
+    mask = jax.random.bernoulli(jax.random.PRNGKey(9), 0.7, (B, 1, S, S))
+    mask = mask.at[:, :, :, 0].set(True)
+    g0 = jax.grad(lambda x: jnp.sum(jnp.sin(
+        A.attend_full(p, x, pos, cfg, mask=mask))))(x)
+    g1 = jax.grad(lambda x: jnp.sum(jnp.sin(
+        A.attend_full(p, x, pos, cfgf, mask=mask))))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g0),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attend_full_per_kv_head_mask_keeps_sdpa():
+    """mask.shape[1] > 1 has no bias encoding — must still run (on _sdpa)."""
+    cfg, p, x, pos, _ = _attn_setup()
+    cfgf = cfg.replace(use_flash_attention=True)
+    B, S = x.shape[:2]
+    mask = jax.random.bernoulli(
+        jax.random.PRNGKey(13), 0.7, (B, cfg.n_kv_heads, S, S))
+    mask = mask.at[:, :, :, 0].set(True)
+    y0 = A.attend_full(p, x, pos, cfg, mask=mask)
+    y1 = A.attend_full(p, x, pos, cfgf, mask=mask)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)

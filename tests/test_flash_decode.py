@@ -1,0 +1,227 @@
+"""Split-K flash-decode kernels vs jnp oracles and the `decode_attend`
+model path (interpret mode): GQA x sliding-window x ragged per-sequence t
+x non-block/page-aligned lengths, paged gather with unmapped pages, and the
+(o, m, l) stats contract the sharded decode merge relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.kernels import flash_decode as fd
+from repro.kernels import ops, ref
+from repro.models import attention as att
+
+
+def _qkv_dec(key, B, W, H, KV, hd, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, W, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, W, KV, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FD_CASES = [
+    # (B, W, H, KV, hd, blk_k, n_splits, window, ragged, dtype)
+    (1, 128, 2, 2, 32, 64, 2, None, False, jnp.float32),
+    (2, 256, 4, 2, 32, 64, 4, None, False, jnp.float32),   # GQA
+    (2, 300, 4, 1, 32, 64, 4, 90, False, jnp.float32),     # window + unaligned W
+    (3, 200, 4, 2, 32, 64, 8, None, True, jnp.float32),    # ragged per-seq t
+    (2, 192, 8, 2, 64, 64, 3, 64, True, jnp.bfloat16),     # everything, bf16
+    (1, 40, 2, 2, 16, 128, 4, None, False, jnp.float32),   # W < blk_k
+]
+
+
+@pytest.mark.parametrize("B,W,H,KV,hd,blk_k,n_splits,window,ragged,dtype",
+                         FD_CASES)
+def test_flash_decode_matches_ref(B, W, H, KV, hd, blk_k, n_splits, window,
+                                  ragged, dtype):
+    q, k, v = _qkv_dec(jax.random.PRNGKey(0), B, W, H, KV, hd, dtype)
+    # rolling-slot layout: absolute position p in slot p % W, all written
+    pos = jnp.arange(W, dtype=jnp.int32)
+    if ragged:
+        t = jnp.array([(7 * b + 11) % W for b in range(B)], jnp.int32)
+    else:
+        t = jnp.int32(W - 1)
+    bias = fd.decode_bias(pos, t, window=window)
+    out = ops.flash_decode(q, k, v, bias, blk_k=blk_k, n_splits=n_splits,
+                           interpret=True)
+    expected = ref.flash_decode_ref(q, k, v, bias)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_decode_stats_contract():
+    """return_stats (o, m, l) must merge across an arbitrary KV split with
+    combine_splits to the unsplit result — the sequence-sharded decode
+    schedule is exactly this merge."""
+    B, W, H, KV, hd = 2, 256, 4, 2, 32
+    q, k, v = _qkv_dec(jax.random.PRNGKey(1), B, W, H, KV, hd)
+    bias = fd.decode_bias(jnp.arange(W, dtype=jnp.int32), jnp.int32(W - 1))
+    o_full = ops.flash_decode(q, k, v, bias, blk_k=64, interpret=True)
+    # split the window into two "shards", merge their (o, m, l)
+    half = W // 2
+    parts = [
+        ops.flash_decode(q, k[:, s], v[:, s], bias[:, s], blk_k=64,
+                         interpret=True, return_stats=True)
+        for s in (slice(0, half), slice(half, W))
+    ]
+    G = H // KV
+    o = jnp.stack([p[0].reshape(B, KV, G, hd) for p in parts], axis=2)
+    m = jnp.stack([p[1].reshape(B, KV, G) for p in parts], axis=2)
+    l = jnp.stack([p[2].reshape(B, KV, G) for p in parts], axis=2)
+    merged, _, _ = fd.combine_splits(o, m, l)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(o_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_fully_masked_rows():
+    B, W, H, KV, hd = 2, 128, 2, 2, 16
+    q, k, v = _qkv_dec(jax.random.PRNGKey(2), B, W, H, KV, hd)
+    bias = jnp.full((B, W), fd.NEG_INF, jnp.float32).at[0].set(0.0)
+    o, m, l = ops.flash_decode(q, k, v, bias, blk_k=64, interpret=True,
+                               return_stats=True)
+    assert np.all(np.asarray(o[1]) == 0.0)
+    assert np.all(np.asarray(m[1]) <= fd.NEG_INF / 2)
+    assert np.all(np.asarray(l[1]) == 0.0)
+    np.testing.assert_allclose(np.asarray(o[0]),
+                               np.asarray(ref.flash_decode_ref(q, k, v, bias)[0]),
+                               rtol=2e-5, atol=2e-5)
+
+
+PAGED_CASES = [
+    # (B, P, ps, maxp, H, KV, hd, window, seq_lens)
+    (2, 8, 64, 3, 4, 2, 32, None, (130, 57)),       # non-page-aligned lengths
+    (3, 12, 64, 5, 2, 1, 32, 100, (320, 17, 64)),   # window frees early pages
+    (2, 6, 128, 2, 4, 4, 16, None, (256, 1)),       # MHA, full + single token
+]
+
+
+@pytest.mark.parametrize("B,P,ps,maxp,H,KV,hd,window,seq_lens", PAGED_CASES)
+def test_flash_decode_paged_matches_ref(B, P, ps, maxp, H, KV, hd, window,
+                                        seq_lens):
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, H, hd))
+    k_pool = jax.random.normal(k2, (P, ps, KV, hd))
+    v_pool = jax.random.normal(k3, (P, ps, KV, hd))
+    seq_len = jnp.array(seq_lens, jnp.int32)
+    # interleave sequences' pages across the pool; unmapped -> -1
+    tbl = np.full((B, maxp), -1, np.int32)
+    nxt = 0
+    for b in range(B):
+        for j in range(-(-int(seq_lens[b]) // ps)):
+            tbl[b, j] = nxt % P
+            nxt += 1
+    # a window that has rolled past a whole page frees it
+    if window is not None:
+        for b in range(B):
+            first_live = max(0, int(seq_lens[b]) - window)
+            for j in range(maxp):
+                if (j + 1) * ps <= first_live:
+                    tbl[b, j] = -1
+    page_table = jnp.asarray(tbl)
+    bias = fd.paged_bias(page_table, seq_len, ps, window=window)
+    out = ops.flash_decode_paged(q, k_pool, v_pool, page_table, bias,
+                                 interpret=True)
+    expected = ref.flash_decode_paged_ref(q, k_pool, v_pool, page_table, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------- model-path parity ----
+def _tiny_cfg(**kw):
+    return ModelConfig(arch_id="t", family="dense", n_layers=1, d_model=32,
+                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64, **kw)
+
+
+@pytest.mark.parametrize("window", [None, 12])
+def test_decode_attend_flash_parity(window):
+    """cfg.use_flash_attention decode == the dense `_sdpa` decode_attend
+    oracle, token by token, through a rolling window."""
+    cfg = _tiny_cfg(sliding_window=window)
+    cfgf = cfg.replace(use_flash_attention=True)
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B = 2
+    c_ref = att.init_kv_cache(cfg, B, 32, jnp.float32)
+    c_fl = c_ref
+    for t in range(20):
+        xt = jax.random.normal(jax.random.PRNGKey(t), (B, 1, cfg.d_model))
+        y_ref, c_ref = att.decode_attend(p, xt, t, c_ref, cfg)
+        y_fl, c_fl = att.decode_attend(p, xt, t, c_fl, cfgf)
+        np.testing.assert_allclose(np.asarray(y_fl), np.asarray(y_ref),
+                                   rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c_fl.k), np.asarray(c_ref.k))
+
+
+def test_decode_attend_ragged_matches_per_sequence():
+    """Ragged per-slot decode == each sequence decoded alone with the scalar
+    path, at staggered absolute positions (continuous-batching semantics)."""
+    cfg = _tiny_cfg(sliding_window=10, use_flash_attention=True)
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, steps = 3, 8
+    offsets = jnp.array([0, 2, 5])
+    cr = att.init_kv_cache(cfg, B, 32, jnp.float32, ragged=True)
+    ys = []
+    for step in range(steps):
+        xt = jax.random.normal(jax.random.PRNGKey(step), (B, 1, cfg.d_model))
+        y, cr = att.decode_attend_ragged(p, xt, offsets + step, cr, cfg)
+        ys.append(y)
+    for b in range(B):
+        c1 = att.init_kv_cache(cfg, 1, 32, jnp.float32)
+        for step in range(steps):
+            t = int(offsets[b]) + step
+            xt = jax.random.normal(jax.random.PRNGKey(step),
+                                   (B, 1, cfg.d_model))[b:b + 1]
+            y1, c1 = att.decode_attend(p, xt, t, c1, cfg)
+            np.testing.assert_allclose(np.asarray(ys[step][b]),
+                                       np.asarray(y1[0]),
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attend_ragged_inactive_slots():
+    cfg = _tiny_cfg(use_flash_attention=True)
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B = 3
+    c0 = att.init_kv_cache(cfg, B, 16, jnp.float32, ragged=True)
+    active = jnp.array([True, False, True])
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model))
+    y, c1 = att.decode_attend_ragged(p, x, jnp.zeros((B,), jnp.int32), c0,
+                                     cfg, active=active)
+    assert np.all(np.asarray(c1.k[1]) == np.asarray(c0.k[1]))
+    assert int(np.asarray(c1.pos[1]).max()) == -1      # still empty
+    assert np.all(np.asarray(y[1]) == 0.0)             # masked attend
+    assert np.any(np.asarray(c1.pos[0]) == 0)
+
+
+def test_decode_cross_attend_flash_parity():
+    cfg = _tiny_cfg()
+    cfgf = cfg.replace(use_flash_attention=True)
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, F, KV, hd = 2, 17, cfg.n_kv_heads, cfg.resolved_head_dim
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model))
+    kv = (jax.random.normal(jax.random.PRNGKey(2), (B, F, KV, hd)),
+          jax.random.normal(jax.random.PRNGKey(3), (B, F, KV, hd)))
+    y0 = att.decode_cross_attend(p, x, kv, cfg)
+    y1 = att.decode_cross_attend(p, x, kv, cfgf)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.slow
+def test_flash_decode_long_window_grid():
+    """Larger sweep: 1k-slot windows, every split config, both mask shapes."""
+    B, W, H, KV, hd = 2, 1024, 8, 2, 64
+    q, k, v = _qkv_dec(jax.random.PRNGKey(7), B, W, H, KV, hd)
+    pos = jnp.arange(W, dtype=jnp.int32)
+    for window in (None, 300):
+        for n_splits in (1, 4, 8):
+            t = jnp.array([W - 1, W // 3], jnp.int32)
+            bias = fd.decode_bias(pos, t, window=window)
+            out = ops.flash_decode(q, k, v, bias, blk_k=128,
+                                   n_splits=n_splits, interpret=True)
+            expected = ref.flash_decode_ref(q, k, v, bias)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                                       rtol=2e-5, atol=2e-5)

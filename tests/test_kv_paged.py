@@ -1,0 +1,140 @@
+"""Paged KV cache vs the dense rolling cache: attend parity per token,
+page-pool accounting invariants across alloc/free/release, slot reuse, and
+windowed page freeing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as att
+from repro.models import kv_paged as kvp
+from repro.models.layers import apply_rope, dense
+
+
+def _cfg(**kw):
+    base = dict(arch_id="t", family="dense", n_layers=1, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                use_flash_attention=True)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _proj_kv(p, cfg, x, positions):
+    k = att._split_heads(dense(p["wk"], x), cfg.n_kv_heads,
+                         cfg.resolved_head_dim)
+    v = att._split_heads(dense(p["wv"], x), cfg.n_kv_heads,
+                         cfg.resolved_head_dim)
+    k = apply_rope(k, positions, rope_fraction=cfg.rope_fraction,
+                   theta=cfg.rope_theta)
+    return k, v
+
+
+def _dense_cache_from_prefill(cfg, max_len, kpre, vpre, L):
+    c = att.init_kv_cache(cfg, 1, max_len, jnp.float32)
+    W = c.window
+    keep = min(L, W)
+    pos = jnp.arange(L - keep, L)
+    slots = pos % W
+    return att.KVCache(k=c.k.at[:, slots].set(kpre[:, L - keep:L]),
+                      v=c.v.at[:, slots].set(vpre[:, L - keep:L]),
+                      pos=c.pos.at[slots].set(pos))
+
+
+@pytest.mark.parametrize("window", [None, 12])
+def test_paged_decode_matches_dense(window):
+    """Ragged prefill + 25 decode steps: every slot's paged attend equals
+    the scalar dense-cache decode, and the pool invariants hold at every
+    step (windowed: pages that roll out are freed)."""
+    cfg = _cfg(sliding_window=window)
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, ps, P, max_len = 3, 8, 32, 64
+    lens = jnp.array([20, 5, 1], jnp.int32)
+    cache = kvp.init_paged_cache(cfg, 1, B, max_len, P, jnp.float32,
+                                 page_size=ps)
+    cache = kvp.alloc_prefill(cache, lens, jnp.ones((B,), bool),
+                              window=window)
+    kvp.check_invariants(cache)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, 20, cfg.d_model))
+    kpre, vpre = _proj_kv(p, cfg, xs, jnp.arange(20))
+    kp, vp = kvp.write_prefill_kv(cache.k_pool[0], cache.v_pool[0],
+                                  cache.page_table, kpre, vpre, lens)
+    cache = cache._replace(k_pool=cache.k_pool.at[0].set(kp),
+                           v_pool=cache.v_pool.at[0].set(vp))
+    dense_caches = [
+        _dense_cache_from_prefill(cfg, max_len, kpre[b:b + 1], vpre[b:b + 1],
+                                  int(lens[b]))
+        for b in range(B)
+    ]
+    active = jnp.ones((B,), bool)
+    for step in range(25):
+        cache = kvp.alloc_decode_page(cache, active)
+        xt = jax.random.normal(jax.random.PRNGKey(100 + step),
+                               (B, 1, cfg.d_model))
+        y, (kp, vp) = kvp.paged_decode_attend(
+            p, xt, (cache.k_pool[0], cache.v_pool[0]), cache.page_table,
+            cache.seq_len, cfg, active=active)
+        cache = cache._replace(k_pool=cache.k_pool.at[0].set(kp),
+                               v_pool=cache.v_pool.at[0].set(vp))
+        cache = kvp.advance_and_free(cache, active, window)
+        kvp.check_invariants(cache)
+        for b in range(B):
+            t = int(lens[b]) + step
+            yd, dense_caches[b] = att.decode_attend(p, xt[b:b + 1], t,
+                                                    dense_caches[b], cfg)
+            np.testing.assert_allclose(np.asarray(y[b]), np.asarray(yd[0]),
+                                       rtol=2e-5, atol=2e-5)
+    if window is not None:
+        # steady state HBM: ~window tokens per slot, not max_len
+        used = P - 1 - int(cache.n_free)
+        assert used <= B * (window // ps + 2), used
+
+
+def test_windowed_prefill_maps_only_live_pages():
+    cfg = _cfg(sliding_window=12)
+    cache = kvp.init_paged_cache(cfg, 1, 2, 64, 32, jnp.float32, page_size=8)
+    lens = jnp.array([40, 6], jnp.int32)
+    cache = kvp.alloc_prefill(cache, lens, jnp.ones((2,), bool), window=12)
+    kvp.check_invariants(cache)
+    tbl = np.asarray(cache.page_table)
+    # live range of slot 0 is [28, 40) -> pages 3 and 4 only
+    assert (tbl[0, :3] == -1).all() and (tbl[0, 3:5] >= 0).all()
+    assert kvp.pages_needed(40, 8, 12) == 2
+    assert (tbl[1, 0] >= 0) and (tbl[1, 1:] == -1).all()
+
+
+def test_release_and_reuse_slot():
+    cfg = _cfg()
+    B, P = 3, 16
+    cache = kvp.init_paged_cache(cfg, 1, B, 64, P, jnp.float32, page_size=8)
+    cache = kvp.alloc_prefill(cache, jnp.array([17, 9, 30]),
+                              jnp.ones((B,), bool))
+    kvp.check_invariants(cache)
+    n0 = int(cache.n_free)
+    cache = kvp.release_slots(cache, jnp.array([False, True, False]))
+    kvp.check_invariants(cache)
+    assert int(cache.n_free) == n0 + 2               # ceil(9/8) pages back
+    assert int(cache.seq_len[1]) == 0
+    assert (np.asarray(cache.page_table[1]) == -1).all()
+    # admit a new request into the freed slot
+    cache = kvp.alloc_prefill(cache, jnp.array([0, 23, 0]),
+                              jnp.array([False, True, False]))
+    kvp.check_invariants(cache)
+    assert int(cache.seq_len[1]) == 23
+    assert (np.asarray(cache.page_table[1, :3]) >= 0).all()
+    # other slots untouched
+    assert int(cache.seq_len[0]) == 17 and int(cache.seq_len[2]) == 30
+
+
+def test_pool_exhaustion_accounting():
+    """Popping exactly the free count leaves n_free == 0 and every page
+    mapped once."""
+    cfg = _cfg()
+    P, ps = 9, 8                                      # 8 allocatable pages
+    cache = kvp.init_paged_cache(cfg, 1, 2, 64, P, jnp.float32, page_size=ps)
+    cache = kvp.alloc_prefill(cache, jnp.array([32, 32]),
+                              jnp.ones((2,), bool))
+    kvp.check_invariants(cache)
+    assert int(cache.n_free) == 0
+    assert (np.asarray(cache.page_table[:, :4]) >= 0).all()
+    assert (np.asarray(cache.page_table[:, 4:]) == -1).all()
