@@ -35,6 +35,21 @@ bases double it (CG s=8, Bi-CG-STAB s=4 — core/sstep.py, EXPERIMENTS.md
 §Perf pair G) at the cost of ``sstep_bootstrap`` shallow monomial cycles
 up front (one Gram reduction each; the Ritz estimates themselves are free,
 extracted from Grams the solver already reduces).
+
+Overlapped schedule (``overlap=True`` — HFConfig.overlap, core/sstep.py
+double-buffered cycles): only BLOCKING syncs count. Two s-iteration cycles
+share one Gram reduction (effective stride 2s), the gradient reduce hides
+behind the curvature primal build (0 blocking), and paired line-search
+trials share round-trips —
+  blocking syncs/outer iteration:  n_boot(2s) + ceil((K − covered)/2s)
+                                   + ceil(E/2)
+  (vs 1 + n_boot(s) + ceil((K − covered)/s) + E non-overlapped; at s=1
+  the standard solver still runs, so the Krylov term stays K).
+The *total* all-reduce count barely moves (the hidden reduces still
+happen; the paired search adds one speculative loss reduce per shared
+round-trip) — the float formulas with ``overlap=True`` price that.
+Cross-checked against executed collective counts by
+benchmarks/fig5_scaling.py --executed and tests/test_comm_model.py.
 """
 from __future__ import annotations
 
@@ -107,7 +122,7 @@ def sstep_bootstrap(s: int, solver: str = "cg", basis: str = "monomial"):
 
 def hf_sstep_floats_per_iteration(
     dims: Sequence[int], cg_iters: int, ls_evals: int, s: int,
-    solver: str = "cg", basis: str = "monomial",
+    solver: str = "cg", basis: str = "monomial", overlap: bool = False,
 ) -> float:
     """Floats exchanged per outer iteration with the s-step solve: gradient
     + the cycle product traffic + one small Gram per cycle + line-search
@@ -121,25 +136,33 @@ def hf_sstep_floats_per_iteration(
     communication (axpys are node-local, the Ritz estimates ride the Gram
     the cycle already reduces). MORE bytes for s× fewer blocking syncs:
     the communication-avoiding trade, priced against latency by
-    fig5_scaling.py's sstep series."""
+    fig5_scaling.py's sstep series.
+
+    ``overlap=True``: double-buffered cycles run chains at effective
+    stride 2s (the deep half's products still cross the wire — hidden,
+    not removed), and the paired line search sends one speculative extra
+    loss scalar per shared round-trip."""
     m = model_size(dims)
-    n_boot, covered = sstep_bootstrap(s, solver, basis)
+    s_eff = 2 * s if (overlap and s > 1) else s
+    n_boot, covered = sstep_bootstrap(s_eff, solver, basis)
     s_boot = 0 if n_boot == 0 else covered // n_boot
-    cycles = math.ceil(max(cg_iters - covered, 0) / max(s, 1))
-    d = 2 * s if solver == "bicgstab" else s
+    cycles = math.ceil(max(cg_iters - covered, 0) / max(s_eff, 1))
+    d = 2 * s_eff if solver == "bicgstab" else s_eff
     d_boot = 2 * s_boot if solver == "bicgstab" else s_boot
-    bl = sstep_basis_len(s, solver)            # == 2d + 1
+    bl = sstep_basis_len(s_eff, solver)        # == 2d + 1
     bl_boot = sstep_basis_len(s_boot, solver) if n_boot else 0
     gram_cols = bl + (3 if solver == "bicgstab" else 0)  # r0*/b/x probe cols
     gram_cols_boot = bl_boot + (3 if solver == "bicgstab" else 0)
     products = cycles * (2 * d - 1) + n_boot * max(2 * d_boot - 1, 0)
     grams = cycles * bl * gram_cols + n_boot * bl_boot * gram_cols_boot
-    return (1 + products) * m + grams + ls_evals
+    ls_floats = 2 * math.ceil(ls_evals / 2) if overlap else ls_evals
+    return (1 + products) * m + grams + ls_floats
 
 
 def hf_sstep_syncs_per_iteration(cg_iters: int, ls_evals: int, s: int,
                                  solver: str = "cg",
-                                 basis: str = "monomial") -> int:
+                                 basis: str = "monomial",
+                                 overlap: bool = False) -> int:
     """Blocking synchronizations per outer iteration: the K per-Krylov-
     iteration scalar round-trips collapse to one Gram reduction per cycle
     of s iterations (1 + ceil(K/s) + E vs 1 + K + E). The adaptive bases
@@ -147,10 +170,25 @@ def hf_sstep_syncs_per_iteration(cg_iters: int, ls_evals: int, s: int,
     ``sstep_bootstrap`` iterations) — the price of the free Ritz
     estimates that let s double past the monomial f32 budget. Validated
     against the executed counts (KrylovResult.syncs) by
-    benchmarks/sstep_bench.py."""
-    n_boot, covered = sstep_bootstrap(s, solver, basis)
-    return (1 + n_boot
-            + math.ceil(max(cg_iters - covered, 0) / max(s, 1)) + ls_evals)
+    benchmarks/sstep_bench.py.
+
+    ``overlap=True`` counts only the syncs that still BLOCK under the
+    overlapped schedule (HFConfig.overlap): the gradient reduce hides
+    behind the curvature primal build (the leading 1 drops), cycles run
+    double-buffered at effective stride 2s, and paired line-search trials
+    share round-trips (E → ceil(E/2)). At s=1 the standard solver still
+    runs (no cycles to double-buffer — core/hf.py engages s-step only for
+    sstep_s>1), so overlap keeps the K per-iteration round-trips and saves
+    only the gradient + line-search terms. Matches
+    ``metrics["blocking_syncs"]``, measured end to end by
+    benchmarks/fig5_scaling.py --executed."""
+    s_eff = 2 * s if (overlap and s > 1) else s
+    n_boot, covered = sstep_bootstrap(s_eff, solver, basis)
+    cycles = math.ceil(max(cg_iters - covered, 0) / max(s_eff, 1))
+    if overlap:
+        krylov = (n_boot + cycles) if s > 1 else cg_iters
+        return krylov + math.ceil(ls_evals / 2)
+    return 1 + n_boot + cycles + ls_evals
 
 
 def sgd_syncs_per_epoch(n: int, b: int, N: int) -> float:

@@ -34,7 +34,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,kernels,"
-                         "attention,curvature,sstep,decode,roofline")
+                         "attention,curvature,sstep,decode,scaling,roofline")
     ap.add_argument("--tiny", action="store_true",
                     help="check mode: run the JSON benches at CI-smoke "
                          "shapes (same code paths, same schema)")
@@ -55,6 +55,7 @@ def main() -> None:
             "sstep": sstep_bench,
             "attention": attention_bench,
             "decode": decode_bench,
+            "scaling": fig5_scaling,
         }
         failures = []
         for name, mod in checked.items():

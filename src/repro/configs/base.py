@@ -189,6 +189,14 @@ class HFOptConfig:
     sstep_s: int = 1
     sstep_solver: str = "auto"
     sstep_basis: str = "monomial"
+    # Overlapped collective schedule (core.hf HFConfig.overlap):
+    # double-buffered s-step cycles (two cycles per Gram reduction), the
+    # gradient all-reduce hidden behind the curvature primal build, and
+    # paired speculative line-search trials — blocking syncs per outer step
+    # drop from 1 + ceil(K/s) + E to ceil(K/2s) + ceil(E/2)
+    # (benchmarks/comm_model.py overlap=True, measured by
+    # benchmarks/fig5_scaling.py --executed).
+    overlap: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,4 +1,5 @@
-"""shard_map replication rules for ``lax.while_loop`` (jax 0.4.x compat).
+"""shard_map replication rules for ``lax.while_loop`` and ``lax.cond``
+(jax 0.4.x compat).
 
 jax 0.4.37's ``jax.experimental.shard_map`` ships replication-check/rewrite
 rules for ``scan`` and ``cond`` but not for ``while`` — so any shard_map
@@ -10,6 +11,23 @@ are replicated as ``out_specs=P()`` promises — with it off, a missing
 collective (e.g. forgetting the explicit ``grad_reduce`` completion pmean
 that ``core.distributed`` threads into ``hf_step``) silently produces
 per-worker-divergent "replicated" state instead of an error.
+
+The shipped ``cond`` and ``scan`` CHECK rules are additionally stricter
+than their REWRITE counterparts: the cond check demands the branches
+produce *identical* replication types, and the scan check demands
+carry-in == carry-out in a single pass — but jax's own rewrite rules (the
+pass that actually runs under check_rep=True and inserts pbroadcasts)
+merge with an intersection (``and_``) and fixpoint the scan carry, which
+is the sound semantics: a value replicated over the axes common to every
+branch (or every carry pass) is replicated over exactly that
+intersection. The s-step solvers hit both strict forms — the Gram-guard
+fallback's accept branch returns coordinate-recurrence state while the
+fallback branch re-enters the standard solver (non-identical rep sets,
+both replicated after the rewrite's pbroadcasts), and the
+Newton/Chebyshev coefficient scans carry values whose replication
+tightens on the first body pass. We re-register both check rules with the
+same merge semantics the rewrites use (for cond, also folding in the
+predicate's replication, which the strict rule ignored).
 
 This module registers the missing rules, modeled 1:1 on the module's own
 ``_scan_check`` / ``_scan_rewrite``: fixpoint the carry replication through
@@ -89,8 +107,54 @@ try:  # pragma: no cover - exercised indirectly via tests/test_distributed.py
             cond_nconsts=cond_nconsts, body_nconsts=body_nconsts)
         return out_vals, carry_rep
 
-    # setdefault semantics: a no-op on jax versions that grew native rules.
+    _scan_p = _cf.loops.scan_p
+
+    def _scan_check(mesh, *in_rep, jaxpr, num_consts, num_carry, **_):
+        # The shipped scan CHECK rule demands carry-in == carry-out
+        # replication in a single pass, while the scan REWRITE rule
+        # fixpoints the carry with an `and_` merge. Mirror the rewrite:
+        # shrink the carry replication until stable, then report the
+        # fixpoint (the s-step Newton/Chebyshev coefficient scans hit
+        # this — their carries tighten from unconstrained to data-axis
+        # replication on the first body pass).
+        const_rep, carry_rep_in, xs_rep = split_list(
+            list(in_rep), [num_consts, num_carry])
+        carry_rep = list(carry_rep_in)
+        ys_rep = []
+        for _ in range(1 + num_carry):
+            out_rep = _sm._check_rep(
+                mesh, jaxpr.jaxpr, [*const_rep, *carry_rep, *xs_rep])
+            carry_out, ys_rep = split_list(list(out_rep), [num_carry])
+            carry_out = list(map(_and, carry_rep, carry_out))
+            if carry_out == carry_rep:
+                break
+            carry_rep = carry_out
+        else:
+            raise Exception(
+                "scan carry replication fixpoint not reached; as a "
+                "workaround pass check_rep=False to shard_map")
+        return [*carry_rep, *ys_rep]
+
+    _cond_p = _cf.conditionals.cond_p
+
+    def _cond_check(mesh, *in_rep, branches):
+        pred_rep, *args_rep = in_rep
+        out_rep = None
+        for branch in branches:
+            rep = _sm._check_rep(mesh, branch.jaxpr, args_rep)
+            out_rep = (list(rep) if out_rep is None
+                       else list(map(_and, out_rep, rep)))
+        # Outputs can only be as replicated as the predicate that selected
+        # the branch (mirrors _cond_rewrite's `and_` with pred_rep).
+        return [_and(pred_rep, r) for r in out_rep]
+
+    # register_check is setdefault — fine for while (no native rule to
+    # displace), but the cond and scan rules must REPLACE the shipped
+    # strict-equality ones with the rewrite-consistent intersection merge,
+    # so they go into the rule table directly.
     _sm.register_check(_while_p)(_while_check)
     _sm.register_rewrite(_while_p)(_while_rewrite)
+    _sm._check_rules[_cond_p] = _cond_check
+    _sm._check_rules[_scan_p] = _scan_check
 except (ImportError, AttributeError):  # newer jax moved/obsoleted these
     pass

@@ -1,0 +1,152 @@
+"""Collective accounting: validate reported sync counts against reality.
+
+``KrylovResult.syncs`` (and ``metrics["blocking_syncs"]``) are *claims* —
+integers the solvers compute about their own communication schedule. This
+module provides two independent ways to check the claims against what the
+compiled program actually does, used by tests/test_collective_audit.py and
+``benchmarks/fig5_scaling.py --executed``:
+
+1. **Static jaxpr audit** — :func:`jaxpr_collective_counts` walks a traced
+   jaxpr and counts collective primitives (``psum`` — what ``lax.pmean``
+   lowers to — plus friends), split into top-level occurrences vs
+   occurrences inside ``while_loop`` bodies. For the HF step the invariant
+   is: executed collectives = top-level count + Σ (body count × trips),
+   where the trip counts are exactly what ``KrylovResult.syncs`` /
+   ``n_evals`` report. This catches collectives that silently appear or
+   vanish at trace time (e.g. an extra GSPMD-inserted reduce).
+
+2. **Executed-collective counter** — :func:`count_executed` + the
+   :func:`preduce` wrapper. ``core.distributed`` routes every explicit
+   reduction through ``preduce(tree, axes, tag)``; inside a
+   ``count_executed()`` region each traced ``preduce`` site also embeds a
+   ``jax.debug.callback`` that fires once per *execution* (per local
+   device), including executions inside ``while_loop`` trips — so the
+   counter observes the runtime collective count that the static audit can
+   only bound. Tracing must happen inside the region (callbacks are baked
+   in at trace time): jit a fresh step function under the context manager.
+
+Why an own-layer wrapper instead of monkeypatching ``jax.lax.psum``:
+``lax.pmean`` calls ``psum`` through jax-internal bindings that a module
+level monkeypatch does not intercept, and primitive ``bind`` hooks see
+retraces/transforms, not executions. Tagging at the call site is the only
+layer where "one logical reduction" is well-defined.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+from typing import Any, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Primitive names that move data across mesh axes (psum covers pmean).
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "psum2", "pmin", "pmax", "ppermute", "all_gather",
+    "all_to_all", "reduce_scatter",
+})
+
+
+class CollectiveCounts:
+    """Mutable tally of executed tagged collectives (host-side)."""
+
+    def __init__(self) -> None:
+        self.counts: collections.Counter = collections.Counter()
+
+    def add(self, tag: str) -> None:
+        self.counts[tag] += 1
+
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def per_device(self, n_local_devices: int) -> dict:
+        """Callbacks fire once per local device shard; normalize them out."""
+        out = {}
+        for tag, n in self.counts.items():
+            assert n % n_local_devices == 0, (tag, n, n_local_devices)
+            out[tag] = n // n_local_devices
+        return out
+
+
+_active: CollectiveCounts | None = None
+
+
+@contextlib.contextmanager
+def count_executed() -> Iterator[CollectiveCounts]:
+    """Instrument ``preduce`` sites traced within this region.
+
+    The counter observes executions of the instrumented program — keep
+    using the jitted function after the region closes and it will keep
+    counting into the same object (the callback closes over it).
+    """
+    global _active
+    prev, _active = _active, CollectiveCounts()
+    try:
+        yield _active
+    finally:
+        _active = prev
+
+
+def preduce(tree: Any, axes: Sequence[str] | str, tag: str = "reduce"):
+    """``lax.pmean`` over a pytree, tagged for executed-count auditing.
+
+    One ``preduce`` call = one logical collective (jax binds a single
+    multi-operand psum for the whole pytree). When tracing happens inside
+    :func:`count_executed`, a debug callback rides along and fires once
+    per execution per local device — inside ``while_loop`` bodies too,
+    which is the whole point: loop-borne collectives are counted at their
+    true multiplicity, not once.
+    """
+    if _active is not None:
+        counter = _active
+        leaf = jax.tree_util.tree_leaves(tree)[0]
+        # The zero-valued scalar operand keeps the callback data-dependent
+        # on the reduced value, so it cannot be hoisted out of a loop body.
+        jax.debug.callback(
+            lambda _: counter.add(tag),
+            jnp.zeros((), jnp.float32) * jnp.sum(leaf).astype(jnp.float32),
+        )
+    return jax.lax.pmean(tree, axes)
+
+
+def _sub_jaxprs(eqn) -> Iterator:
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if isinstance(v, jax.core.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, jax.core.Jaxpr):
+                yield v
+
+
+def jaxpr_collective_counts(jaxpr) -> dict:
+    """Count collective primitive equations in a (closed) jaxpr.
+
+    Returns ``{"top": Counter, "while_body": Counter}`` mapping primitive
+    name → static occurrence count. "top" is everything executed exactly
+    once per step (including inside cond branches, scans with known length
+    1, pjit bodies); "while_body" is everything inside a ``while`` body or
+    cond jaxpr, which executes once per trip — multiply by the trip count
+    (= the solver's reported syncs) to predict executed collectives.
+    """
+    if isinstance(jaxpr, jax.core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    out = {"top": collections.Counter(), "while_body": collections.Counter()}
+
+    def walk(jx, in_while: bool) -> None:
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name in COLLECTIVE_PRIMS:
+                out["while_body" if in_while else "top"][name] += 1
+            child_in_while = in_while or name == "while"
+            for sub in _sub_jaxprs(eqn):
+                walk(sub, child_in_while)
+
+    walk(jaxpr, False)
+    return out
+
+
+def total_static_collectives(jaxpr) -> dict:
+    """Convenience: summed psum-family counts per region."""
+    c = jaxpr_collective_counts(jaxpr)
+    return {k: sum(v.values()) for k, v in c.items()}

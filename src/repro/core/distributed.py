@@ -3,7 +3,7 @@ with its MPI schedule written out.
 
 Under pjit/GSPMD the collectives are implicit (sharding propagation inserts
 them); this module is the *explicit* form: each worker holds a batch shard,
-the loss is ``lax.pmean``-ed over the data axes, and therefore
+the loss is ``pmean``-ed over the data axes, and therefore
 
   * ``jax.grad``   of the pmean'd loss  = local grad + ONE all-reduce
                                           (Alg. 2 line 4, "reduce to root"),
@@ -11,11 +11,44 @@ the loss is ``lax.pmean``-ed over the data axes, and therefore
                                           Krylov iteration (line 5),
   * each line-search trial              = ONE scalar all-reduce (line 9).
 
+Every reduction goes through ``core.collectives.preduce`` (a tagged
+``lax.pmean``), so the schedule is *auditable*: the static jaxpr walk
+(``jaxpr_collective_counts``) and the executed-collective counter
+(``count_executed``) both validate ``metrics["krylov_syncs"]`` /
+``metrics["blocking_syncs"]`` against the program that actually ran —
+see tests/test_collective_audit.py and benchmarks/fig5_scaling.py
+--executed.
+
+**Sync schedule per outer HF step** (K Krylov iterations, E line-search
+evaluations; "blocking" = a round-trip whose result gates the next launch):
+
+  schedule                      all-reduces             blocking syncs
+  ----------------------------  ----------------------  ----------------------
+  standard (sstep_s=1)          1 + K + E               1 + K + E
+  s-step (s>1)                  1 + K + ceil(K/s) + E   1 + ceil(K/s) + E
+  s-step + overlap              1 + K + ceil(K/2s) + E  ceil(K/2s) + ceil(E/2)
+
+  * s-step keeps one matvec all-reduce per iteration (the K term) but those
+    pipeline back-to-back inside a cycle's chain phase with no scalar gate;
+    the Gram reduce (ceil(K/s)) is the only blocking sync of the solve.
+  * overlap (HFConfig.overlap) double-buffers cycles — TWO cycles of
+    coordinate recurrences per Gram reduce (ceil(K/2s)) — hides the
+    gradient all-reduce behind the curvature operator's primal build
+    (the leading 1 stops blocking), and pairs line-search trials so two
+    loss reduces share one round-trip (ceil(E/2)). Same arithmetic, same
+    accepted step; only the schedule changes.
+
 Everything else (Krylov recurrences, damping, direction selection) operates
 on replicated state, exactly like the paper's root-node logic — except no
 root: every chip is the root. The resulting step is numerically identical to
 the pjit path (tested) — use whichever fits the deployment; GSPMD can
 overlap/schedule, shard_map makes the schedule auditable.
+
+This very schedule runs multi-process — N real processes, gloo CPU
+collectives or a TPU pod — through ``launch/multiproc.py`` +
+``launch/train.py --num-processes N`` (mesh from
+``launch.mesh.make_data_mesh``); tests/test_multiproc.py holds the
+2-process parity and executed-sync-count checks.
 
 Because the Krylov state is per-chip *replicated* here (pure data
 parallelism), this is exactly the deployment where
@@ -69,7 +102,8 @@ import jax
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from . import _shard_map_compat  # noqa: F401  (while_loop replication rules)
+from . import _shard_map_compat  # noqa: F401  (while/cond replication rules)
+from .collectives import preduce
 from .hf import HFConfig, hf_step
 
 
@@ -92,10 +126,10 @@ def data_parallel_hf_step(
     axes = tuple(data_axes)
 
     def dloss(p, b):
-        return jax.lax.pmean(loss_fn(p, b), axes)
+        return preduce(loss_fn(p, b), axes, tag="loss")
 
     def dout_loss(z, b):
-        return jax.lax.pmean(out_loss_fn(z, b), axes)
+        return preduce(out_loss_fn(z, b), axes, tag="out_loss")
 
     def hvp_slice(b):
         if hvp_frac >= 1.0:
@@ -113,7 +147,7 @@ def data_parallel_hf_step(
     # out_specs=P() is verified end-to-end (the while_loop replication rules
     # come from _shard_map_compat).
     def grad_reduce(t):
-        return jax.lax.pmean(t, axes)
+        return preduce(t, axes, tag="grad_hvp")
 
     @functools.partial(
         shard_map,

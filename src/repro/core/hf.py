@@ -153,6 +153,22 @@ class HFConfig:
     # §Perf pair G), with a fallback chain Newton/Chebyshev → monomial →
     # standard solver on guard failure.
     sstep_basis: str = "monomial"
+    # Overlapped collective schedule (the executed Fig. 5 harness's
+    # double-buffered mode — benchmarks/fig5_scaling.py --executed):
+    #   * s-step cycles are double-buffered (core.sstep overlap=True): two
+    #     cycles share one Gram reduction, its all-reduce hidden behind the
+    #     second cycle's chain growth; the speculative deep half runs under
+    #     the depth-resolved prefix guard, so it never converges worse than
+    #     the non-overlapped schedule at the same s.
+    #   * the gradient all-reduce is issued concurrently with the curvature
+    #     engine's primal build (no data dependence) instead of gating it —
+    #     its latency hides behind a model-sized forward.
+    #   * the Armijo search evaluates candidate PAIRS per trip
+    #     (core.line_search paired=True): same accepted α, ⌈E/2⌉ blocking
+    #     scalar round-trips instead of E.
+    # metrics["blocking_syncs"] reports the executed blocking count either
+    # way; benchmarks/comm_model.py carries the overlap=True formula.
+    overlap: bool = False
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
@@ -265,7 +281,7 @@ def hf_step(
     else:
         # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) --------
         f0, g = jax.value_and_grad(loss_fn)(params, batch)
-        if grad_reduce is not None:
+        if grad_reduce is not None and not config.overlap:
             g = grad_reduce(g)
         # Only build the operators the solver will apply: in the linearized
         # modes construction itself runs a primal pass (eagerly, outside jit).
@@ -285,6 +301,15 @@ def hf_step(
         else:
             gn = make_gnvp_op(model_out_fn, out_loss_fn, params, hvp_batch,
                               **curv_kw)
+    if not shared and grad_reduce is not None and config.overlap:
+        # Hidden grad-reduce (overlapped schedule): the model-sized gradient
+        # all-reduce has no data dependence on the curvature engine's primal
+        # build, so issuing it AFTER the operator construction above lets
+        # the scheduler run the collective concurrently with that forward —
+        # its first consumer is the Krylov right-hand side, by which point
+        # the reduce has completed. Counted as 0 blocking round-trips in
+        # metrics["blocking_syncs"].
+        g = grad_reduce(g)
     if config.solver == "gn_cg":
         G = gn
     elif config.solver in ("hessian_cg", "bicgstab"):
@@ -335,7 +360,7 @@ def hf_step(
             A, b, x0, lam=lam, s=config.sstep_s,
             max_iters=config.max_cg_iters, tol=config.cg_tol,
             backend=krylov_be, A_block=block_op_from_single(A),
-            basis=config.sstep_basis,
+            basis=config.sstep_basis, overlap=config.overlap,
         )
     elif config.solver == "bicgstab":
         res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
@@ -394,6 +419,7 @@ def hf_step(
     ls = armijo(
         lambda p: loss_fn(p, batch), params, f0, delta, g_dot_delta,
         c=config.ls_c, beta=config.ls_beta, max_backtracks=config.max_backtracks,
+        paired=config.overlap,
     )
 
     # ---- Alg.2 lines 8,10: LM damping + parameter update --------------------
@@ -434,6 +460,18 @@ def hf_step(
         # comm model's `1 + ceil(K/s) + E` counts (benchmarks/comm_model.py,
         # measured by benchmarks/sstep_bench.py).
         "krylov_syncs": res.syncs,
+        # Executed BLOCKING synchronizations this outer step — round-trips
+        # where the schedule stalls on a collective's result before the next
+        # one can issue: the gradient reduce (hidden behind the curvature
+        # primal build under the overlapped schedule ⇒ 0), one per Krylov
+        # sync (iterations / Gram cycles — double-buffered cycles already
+        # halve res.syncs), and one per line-search trip (candidate PAIRS
+        # under overlap ⇒ ⌈E/2⌉). The executed counterpart of
+        # comm_model.hf_sstep_syncs_per_iteration(..., overlap=).
+        "blocking_syncs": (
+            res.syncs + (ls.n_evals + 1) // 2 if config.overlap
+            else 1 + res.syncs + ls.n_evals
+        ),
         "sstep_fallback": jnp.logical_and(config.sstep_s > 1, res.breakdown),
         # The subset of sstep_fallback caused by the GRAM GUARD (the basis
         # degenerating) — Bi-CG-STAB ρ/ω recurrence collapse, which the

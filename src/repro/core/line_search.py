@@ -5,6 +5,16 @@ f(θ + α δ) ≤ f(θ) + c·α·gᵀδ,  α ∈ {1, β, β², ...}.
 Each trial re-evaluates the full-batch loss — data-parallel, one all-reduce —
 which is the paper's "line search inherits the scaling of the gradient" cost
 model (Fig. 5). Runs fully inside the jitted HF step: no host round trips.
+
+``paired=True`` (the overlapped-collective schedule, HFConfig.overlap):
+each loop trip evaluates TWO consecutive candidates (α, βα) — two
+independent forwards whose loss all-reduces pipeline back-to-back with no
+scalar gate between them — then selects the first acceptable one. The
+accepted α is identical to the sequential search (same β-descending
+candidate sequence, first-accept semantics); the trade is one speculative
+extra evaluation's compute for halving the number of BLOCKING scalar
+round-trips per search from E to ⌈E/2⌉ (benchmarks/comm_model.py,
+``overlap=True``).
 """
 from __future__ import annotations
 
@@ -34,6 +44,7 @@ def armijo(
     beta: float = 0.5,
     max_backtracks: int = 12,
     alpha0: float = 1.0,
+    paired: bool = False,
 ) -> LineSearchResult:
     """loss_fn already closes over the batch: params ↦ scalar loss."""
 
@@ -44,12 +55,29 @@ def armijo(
         alpha, f_new, k, ok = carry
         return jnp.logical_and(k < max_backtracks, jnp.logical_not(ok))
 
-    def body(carry):
-        alpha, _, k, _ = carry
-        f_new = trial(alpha)
-        ok = f_new <= f0 + c * alpha * g_dot_delta
-        alpha_next = jnp.where(ok, alpha, alpha * beta)
-        return (alpha_next, f_new, k + 1, ok)
+    if paired:
+        def body(carry):
+            alpha, _, k, _ = carry
+            # Two speculative candidates per trip: f(α) and f(βα) have no
+            # data dependence on each other, so their loss reductions issue
+            # together — ONE blocking round-trip for two trials.
+            alpha2 = alpha * beta
+            f1 = trial(alpha)
+            f2 = trial(alpha2)
+            ok1 = f1 <= f0 + c * alpha * g_dot_delta
+            ok2 = f2 <= f0 + c * alpha2 * g_dot_delta
+            ok = jnp.logical_or(ok1, ok2)
+            alpha_sel = jnp.where(ok1, alpha, alpha2)
+            f_sel = jnp.where(ok1, f1, f2)
+            alpha_next = jnp.where(ok, alpha_sel, alpha * beta * beta)
+            return (alpha_next, f_sel, k + 2, ok)
+    else:
+        def body(carry):
+            alpha, _, k, _ = carry
+            f_new = trial(alpha)
+            ok = f_new <= f0 + c * alpha * g_dot_delta
+            alpha_next = jnp.where(ok, alpha, alpha * beta)
+            return (alpha_next, f_new, k + 1, ok)
 
     alpha, f_new, k, ok = jax.lax.while_loop(
         cond, body, (jnp.asarray(alpha0), f0, jnp.zeros((), jnp.int32), jnp.zeros((), bool))

@@ -9,16 +9,50 @@ collectives stay on intra-pod ICI.
 
 Defined as functions so importing this module never touches jax device
 state (device count is locked at first jax init).
+
+Multi-process note: every mesh here is built over the GLOBAL device list
+(``jax.devices()``, what ``jax.make_mesh`` enumerates) — NOT
+``jax.local_devices()``. Under ``jax.distributed`` each process sees only
+its local slice of the hardware through ``local_devices()``, and a mesh
+built from that would silently degenerate to per-process data parallelism
+with no cross-process collectives. Every process must construct the SAME
+global mesh (identical shape/axis order) for shard_map programs to agree;
+``make_data_mesh`` is the 1-D form the multi-process harness
+(launch/multiproc.py) uses.
 """
 from __future__ import annotations
 
 import jax
 
 
+def make_data_mesh(axis: str = "data"):
+    """1-D pure data-parallel mesh over ALL global devices.
+
+    One axis, size = total device count across every participating process
+    (1 per process under the CPU harness's XLA_FLAGS pinning). This is the
+    mesh for ``core.distributed.data_parallel_hf_step`` runs launched via
+    ``launch/multiproc.py``.
+    """
+    return jax.make_mesh((len(jax.devices()),), (axis,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if len(jax.devices()) != _prod(shape):
+        raise ValueError(
+            f"production mesh {shape} needs {_prod(shape)} global devices, "
+            f"found {len(jax.devices())} (jax.devices(); note "
+            "jax.local_devices() is only this process's slice)"
+        )
     return jax.make_mesh(shape, axes)
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= s
+    return out
 
 
 def data_axes(mesh) -> tuple:

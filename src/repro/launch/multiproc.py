@@ -1,0 +1,168 @@
+"""Multi-process launcher: the shard_map HF step on N real processes.
+
+The shard_map schedule in ``core.distributed`` is process-count agnostic —
+the same program runs on 8 fake CPU devices in one process (tests) or on a
+TPU pod. What was missing is the harness that actually *spawns* processes
+and wires ``jax.distributed`` between them, so the collectives cross a real
+process boundary and the sync counts are measured, not simulated:
+
+  PYTHONPATH=src python -m repro.launch.train --arch mlp-30-10 --smoke \\
+      --num-processes 2 --sstep 2 --overlap
+
+The parent re-executes its own command line N times with
+``REPRO_MULTIPROC_*`` set; each child calls :func:`initialize_from_env`
+BEFORE any jax device use, which points ``jax.distributed.initialize`` at a
+local TCP coordinator and selects the gloo CPU collective backend. Each
+child is pinned to ONE CPU device (``XLA_FLAGS`` below) so the global
+device count equals the process count and ``launch.mesh.make_data_mesh``
+builds an N-way pure data-parallel mesh.
+
+On a TPU pod the same entry point applies: the pod runtime launches one
+process per host itself, so skip :func:`spawn` and call
+``jax.distributed.initialize()`` with no arguments (auto-detected
+coordinator); everything downstream — mesh construction over global
+devices, :func:`shard_batch` / :func:`replicate` placement, primary-only
+logging — is identical.
+
+Placement invariants (multi-process jit refuses to reshard across
+processes, so inputs must arrive with their final global sharding):
+
+  * batch leaves:   sharded on the leading dim over the data axis
+                    (:func:`shard_batch` — every process builds the SAME
+                    global batch from the same PRNG key and device_puts its
+                    addressable shard),
+  * params/state:   replicated (:func:`replicate`), bitwise identical
+                    across processes by construction (same seed),
+  * step outputs:   carry the out_specs shardings (all replicated here),
+                    so ``float(metric)`` works on every process.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+from typing import Any, Sequence
+
+ENV_NUM = "REPRO_MULTIPROC_NUM"
+ENV_ID = "REPRO_MULTIPROC_ID"
+ENV_COORD = "REPRO_MULTIPROC_COORD"
+
+# One CPU device per process: global devices == processes, and the gloo
+# cross-process collectives carry ALL communication (nothing hides on an
+# intra-process fast path).
+_CHILD_XLA_FLAGS = "--xla_force_host_platform_device_count=1"
+
+
+def active() -> bool:
+    """True in a child process spawned by :func:`spawn`."""
+    return ENV_NUM in os.environ
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn(
+    num_processes: int,
+    module: str,
+    args: Sequence[str] = (),
+    *,
+    env: dict | None = None,
+) -> None:
+    """Run ``python -m module *args`` as ``num_processes`` coordinated procs.
+
+    Process 0 inherits stdout/stderr (it is the logging primary); the
+    others are captured and replayed only on failure. Raises RuntimeError
+    if any child exits non-zero.
+    """
+    coord = f"127.0.0.1:{_free_port()}"
+    base = dict(os.environ if env is None else env)
+    base["XLA_FLAGS"] = _CHILD_XLA_FLAGS
+    procs = []
+    for pid in range(num_processes):
+        child_env = dict(base)
+        child_env[ENV_NUM] = str(num_processes)
+        child_env[ENV_ID] = str(pid)
+        child_env[ENV_COORD] = coord
+        capture = pid != 0
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", module, *args],
+            env=child_env,
+            stdout=subprocess.PIPE if capture else None,
+            stderr=subprocess.STDOUT if capture else None,
+            text=True,
+        ))
+    rcs = [p.wait() for p in procs]
+    if any(rcs):
+        for pid, p in enumerate(procs):
+            if rcs[pid] and p.stdout is not None:
+                tail = p.stdout.read().splitlines()[-30:]
+                print(f"--- process {pid} (exit {rcs[pid]}) ---", file=sys.stderr)
+                print("\n".join(tail), file=sys.stderr)
+        raise RuntimeError(f"multiproc children failed: exit codes {rcs}")
+
+
+def initialize_from_env() -> None:
+    """Wire jax.distributed from the ``spawn`` env vars (no-op otherwise).
+
+    Must run before anything touches jax devices — the CPU collective
+    backend (gloo, the cross-process psum transport) is locked at backend
+    init.
+    """
+    if not active():
+        return
+    import jax
+
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(
+        coordinator_address=os.environ[ENV_COORD],
+        num_processes=int(os.environ[ENV_NUM]),
+        process_id=int(os.environ[ENV_ID]),
+    )
+
+
+def is_primary() -> bool:
+    import jax
+
+    return jax.process_index() == 0
+
+
+def shard_batch(batch: Any, mesh, axis: str = "data"):
+    """Place a (replicated host) batch with leading-dim sharding over ``axis``.
+
+    Every process passes the SAME global batch (same PRNG); each leaf lands
+    as one global jax.Array of which this process holds its addressable
+    shard. Works identically single-process.
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sharding = NamedSharding(mesh, P(axis))
+
+    def put(x):
+        return jax.device_put(np.asarray(x), sharding)
+
+    return jax.tree_util.tree_map(put, batch)
+
+
+def replicate(tree: Any, mesh):
+    """Place a pytree fully-replicated over the whole mesh.
+
+    Inputs must already be identical across processes (same-seed init);
+    this just stamps the global replicated sharding so jit accepts them
+    next to cross-process-sharded batches.
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sharding = NamedSharding(mesh, P())
+
+    def put(x):
+        return jax.device_put(np.asarray(x), sharding)
+
+    return jax.tree_util.tree_map(put, tree)

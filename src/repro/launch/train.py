@@ -6,12 +6,21 @@
 Runs the distributed HF optimizer (or a first-order baseline) on synthetic
 LM data, with checkpointing and metric logging. ``--smoke`` selects the
 reduced config (CPU-runnable); without it the full config is used (TPU).
+
+``--num-processes N`` (N > 1) re-launches this same command as N
+coordinated processes (launch/multiproc.py) and runs the explicit
+shard_map data-parallel HF step (core/distributed.py) over an N-way
+"data" mesh — one CPU device per process locally, the pod runtime's
+process set on TPU. ``--overlap`` turns on the overlapped-collective
+schedule (HFConfig.overlap: double-buffered s-step cycles, hidden
+gradient reduce, paired line search).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -22,6 +31,8 @@ from ..configs import ARCH_IDS, HFOptConfig, get_config, get_smoke_config
 from ..data import lm_batch
 from ..models import build_model
 from ..optim import make_optimizer
+from . import multiproc
+from .mesh import make_data_mesh
 
 
 def train(
@@ -43,6 +54,8 @@ def train(
     sstep: int = 1,
     sstep_solver: str = "auto",
     sstep_basis: str = "monomial",
+    overlap: bool = False,
+    distributed: bool = False,
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
     log_fn=print,
@@ -58,10 +71,24 @@ def train(
         curvature_mode=curvature_mode,
         curvature_chunk_size=curvature_chunk_size,
         sstep_s=sstep, sstep_solver=sstep_solver, sstep_basis=sstep_basis,
+        overlap=overlap,
     )
+    mesh = None
+    if distributed:
+        # Every process builds the SAME global mesh (global device list)
+        # and the same batch/params from the same PRNG; only the device_put
+        # placement differs per process.
+        mesh = make_data_mesh()
+        n_shards = mesh.shape["data"]
+        if batch_size % n_shards != 0:
+            raise ValueError(
+                f"batch_size {batch_size} not divisible by data-mesh size {n_shards}"
+            )
+        if not multiproc.is_primary():
+            log_fn = lambda *a, **k: None  # noqa: E731  (primary-only logging)
     opt = make_optimizer(
         opt_cfg, model.loss_fn, model_out_fn=model.logits_fn,
-        out_loss_fn=model.out_loss_fn,
+        out_loss_fn=model.out_loss_fn, mesh=mesh,
     )
 
     key = jax.random.PRNGKey(0)
@@ -74,11 +101,16 @@ def train(
             params, state, meta = restore_checkpoint(ckpt_dir, last, params, state)
             start = meta["step"]
             log_fn(f"restored checkpoint at step {start}")
+    if mesh is not None:
+        params = multiproc.replicate(params, mesh)
+        state = multiproc.replicate(state, mesh)
 
     step_fn = jax.jit(opt.step)
     history = []
     for i in range(start, steps):
         batch = lm_batch(jax.random.fold_in(key, 1000 + i), cfg, batch_size, seq_len)
+        if mesh is not None:
+            batch = multiproc.shard_batch(batch, mesh)
         t0 = time.time()
         params, state, metrics = step_fn(params, state, batch)
         metrics = {k: float(v) for k, v in metrics.items()}
@@ -90,7 +122,8 @@ def train(
             + (f" λ {metrics['lambda']:.3g} α {metrics['alpha']:.2f} cg {metrics['cg_iters']:.0f}"
                if "lambda" in metrics else "")
         )
-        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+        if (ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0
+                and (mesh is None or multiproc.is_primary())):
             save_checkpoint(ckpt_dir, i + 1, params, state)
     return params, state, history
 
@@ -139,10 +172,27 @@ def main():
                          "double usable s (free estimates from the cycle "
                          "Gram; falls back monomial -> standard on guard "
                          "failure)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped-collective schedule: double-buffered "
+                         "s-step cycles (two cycles per Gram reduce), the "
+                         "gradient all-reduce hidden behind the curvature "
+                         "build, and paired speculative line-search trials "
+                         "(reports metrics['blocking_syncs'])")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="spawn N coordinated processes (jax.distributed, "
+                         "gloo CPU collectives, 1 device each) and run the "
+                         "explicit shard_map data-parallel step over an "
+                         "N-way data mesh; on a TPU pod the runtime spawns "
+                         "processes itself — see launch/multiproc.py")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args()
+
+    if args.num_processes > 1 and not multiproc.active():
+        multiproc.spawn(args.num_processes, "repro.launch.train", sys.argv[1:])
+        return
+    multiproc.initialize_from_env()
 
     _, _, history = train(
         args.arch, smoke=args.smoke, solver=args.solver, steps=args.steps,
@@ -154,9 +204,11 @@ def main():
         curvature_chunk_size=args.curvature_chunk_size,
         sstep=args.sstep, sstep_solver=args.sstep_solver,
         sstep_basis=args.sstep_basis,
+        overlap=args.overlap,
+        distributed=multiproc.active(),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
     )
-    if args.history_out:
+    if args.history_out and (not multiproc.active() or multiproc.is_primary()):
         os.makedirs(os.path.dirname(args.history_out) or ".", exist_ok=True)
         with open(args.history_out, "w") as f:
             json.dump(history, f, indent=1)

@@ -42,8 +42,21 @@ def make_optimizer(
     loss_fn,
     model_out_fn=None,
     out_loss_fn=None,
+    mesh=None,
+    data_axes=("data",),
 ) -> Optimizer:
+    """``mesh`` selects the explicit data-parallel step: the HF step is
+    wrapped in shard_map over ``data_axes`` (core.distributed — batch leaves
+    sharded on their leading dim, params/state replicated, the paper's MPI
+    schedule written out). Works for single- AND multi-process meshes
+    (launch/multiproc.py); first-order optimizers don't take a mesh here.
+    """
     if opt.name in FIRST_ORDER:
+        if mesh is not None:
+            raise ValueError(
+                "mesh= is only supported for the HF optimizers "
+                f"(got first-order {opt.name!r})"
+            )
         fo = {
             "sgd": lambda: sgd(opt.lr),
             "momentum": lambda: momentum_sgd(opt.lr, opt.momentum),
@@ -68,10 +81,21 @@ def make_optimizer(
         sstep_s=opt.sstep_s,
         sstep_solver=opt.sstep_solver,
         sstep_basis=opt.sstep_basis,
+        overlap=opt.overlap,
     )
 
     def init(params):
         return hf_init(params, hf_cfg)
+
+    if mesh is not None:
+        from ..core.distributed import data_parallel_hf_step
+
+        step = data_parallel_hf_step(
+            loss_fn, mesh, hf_cfg, data_axes=tuple(data_axes),
+            hvp_frac=opt.hvp_batch_frac,
+            model_out_fn=model_out_fn, out_loss_fn=out_loss_fn,
+        )
+        return Optimizer(opt.name, init, step)
 
     def step(params, state, batch):
         hvp_batch = _slice_batch(batch, opt.hvp_batch_frac)

@@ -181,3 +181,73 @@ class TestSStepBasisModel:
         bound = hf_sstep_syncs_per_iteration(K, 0, 8, solver="cg",
                                              basis="newton") - 1
         assert int(res.syncs) <= bound
+
+
+class TestOverlapModel:
+    """Overlapped-schedule formulas (``overlap=True`` — HFConfig.overlap):
+    double-buffered cycles, hidden grad-reduce, paired line search. The
+    executed counterparts are asserted by tests/test_overlap.py and
+    benchmarks/fig5_scaling.py --executed."""
+
+    def test_blocking_syncs_formula(self):
+        K, E = 16, 3
+        # s=4 overlap: cycles at stride 8, no gradient term, paired search.
+        assert hf_sstep_syncs_per_iteration(K, E, 4, overlap=True) == \
+            math.ceil(K / 8) + math.ceil(E / 2) == 4
+        assert hf_sstep_syncs_per_iteration(K, E, 4) == 1 + 4 + E
+
+    def test_overlap_strictly_fewer_blocking_syncs(self):
+        # Bi-CG-STAB/newton stops at s=4: its bootstrap cycle count grows
+        # with the doubled effective stride (ceil(2s/s_boot)+1), so at
+        # extreme s the overlap schedule is bootstrap-dominated and the
+        # saving inverts — overlap is a small-to-moderate-s tool there.
+        K, E = 16, 2
+        for solver, basis, s_range in (("cg", "monomial", (2, 4, 8)),
+                                       ("cg", "newton", (2, 4, 8)),
+                                       ("bicgstab", "newton", (2, 4))):
+            for s in s_range:
+                ov = hf_sstep_syncs_per_iteration(K, E, s, solver=solver,
+                                                  basis=basis, overlap=True)
+                base = hf_sstep_syncs_per_iteration(K, E, s, solver=solver,
+                                                    basis=basis)
+                assert ov < base, (s, solver, basis, ov, base)
+
+    def test_s1_keeps_standard_krylov_term(self):
+        # s-step only engages for s > 1 (core/hf.py): at s=1 the standard
+        # solver's K per-iteration round-trips remain; overlap saves only
+        # the gradient (hidden) and line-search (paired) terms.
+        K, E = 10, 3
+        assert hf_sstep_syncs_per_iteration(K, E, 1, overlap=True) == \
+            K + math.ceil(E / 2)
+
+    def test_bootstrap_runs_at_doubled_stride(self):
+        # Double-buffered cycles bootstrap at the EFFECTIVE stride 2s.
+        K, E, s = 32, 2, 4
+        n_boot, covered = sstep_bootstrap(2 * s, "cg", "newton")
+        expect = n_boot + math.ceil((K - covered) / (2 * s)) + 1
+        assert hf_sstep_syncs_per_iteration(K, E, s, basis="newton",
+                                            overlap=True) == expect
+
+    def test_overlap_floats_hidden_not_removed(self):
+        """Overlap hides reduces behind compute; the bytes still flow. The
+        paired search can only ADD (one speculative eval on odd E); the
+        model-sized chain traffic stays within the ~2x envelope."""
+        dims, K, s = (784, 400, 150, 10), 16, 4
+        for E in (2, 3):
+            ov = hf_sstep_floats_per_iteration(dims, K, E, s, overlap=True)
+            base = hf_sstep_floats_per_iteration(dims, K, E, s)
+            std = hf_floats_per_iteration(dims, K, E)
+            assert ov >= std
+            assert ov < 2.1 * std
+            # ... and never fewer total floats than the non-overlapped
+            # schedule minus rounding (hidden ≠ removed).
+            assert ov >= base - 1
+
+    def test_overlap_floats_paired_ls_rounds_up(self):
+        dims, K, s = (784, 400, 150, 10), 16, 1
+        # s=1: identical chains either way; only the line-search scalars
+        # differ — 2*ceil(E/2) paired vs E serial.
+        for E in (1, 2, 3, 4):
+            ov = hf_sstep_floats_per_iteration(dims, K, E, s, overlap=True)
+            base = hf_sstep_floats_per_iteration(dims, K, E, s)
+            assert ov - base == 2 * math.ceil(E / 2) - E

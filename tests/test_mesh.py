@@ -1,0 +1,43 @@
+"""launch/mesh.py regression tests — global-vs-local device discipline.
+
+Under ``jax.distributed`` every process must build the SAME mesh over the
+GLOBAL device list; a mesh built from ``jax.local_devices()`` silently
+degenerates to per-process data parallelism with no cross-process
+collectives. These tests pin the two guarantees launch/mesh.py makes:
+``make_data_mesh`` spans all global devices, and ``make_production_mesh``
+refuses (rather than mis-shapes) when the global device count does not
+match the production topology.
+"""
+import jax
+import pytest
+
+from repro.launch.mesh import (batch_axes_if_divisible, data_axes,
+                               make_data_mesh, make_production_mesh)
+
+
+def test_data_mesh_spans_all_global_devices():
+    mesh = make_data_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh.shape["data"] == len(jax.devices())
+    assert set(mesh.devices.flat) == set(jax.devices())
+
+
+def test_data_mesh_custom_axis_name():
+    mesh = make_data_mesh(axis="dp")
+    assert mesh.axis_names == ("dp",)
+    assert data_axes(mesh) == ()  # "dp" is not a recognized data axis name
+
+
+def test_production_mesh_rejects_wrong_global_device_count():
+    # The test process sees 1 CPU device; the production shapes need
+    # 256/512. The old behavior built a mesh from whatever was available —
+    # exactly the local-devices degeneration the docstring warns about.
+    for multi_pod in (False, True):
+        with pytest.raises(ValueError, match="global devices"):
+            make_production_mesh(multi_pod=multi_pod)
+
+
+def test_data_mesh_batch_axes():
+    mesh = make_data_mesh()
+    axes = batch_axes_if_divisible(mesh, 8)
+    assert axes == ("data",)

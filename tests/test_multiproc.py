@@ -1,0 +1,107 @@
+"""Multi-process harness tests (launch/multiproc.py).
+
+The fast tests cover the launcher mechanics in-process. The slow tests
+spawn REAL coordinated processes (jax.distributed + gloo CPU collectives,
+one device each) and assert the tentpole claims end to end:
+
+  * a 2-process ``data_parallel_hf_step`` run produces the same losses and
+    the same executed collective counts as the 1-process run of the
+    identical program (the schedule is process-count invariant),
+  * the executed blocking-sync count matches the §3 comm-model formula,
+  * the ``train.py --num-processes`` CLI re-entry path (parent re-spawns
+    its own argv, children initialize from env) completes a smoke run.
+
+benchmarks/fig5_scaling.py --executed runs the same harness over the full
+{cg, bicgstab} × {s=1, s>1 newton} × overlap grid as the CI bench check;
+these tests keep the harness itself under the weekly slow grid.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import multiproc
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_not_active_outside_spawn(monkeypatch):
+    monkeypatch.delenv(multiproc.ENV_NUM, raising=False)
+    assert not multiproc.active()
+    # initialize_from_env must be a no-op here (calling jax.distributed
+    # without a coordinator would hang).
+    multiproc.initialize_from_env()
+
+
+def test_free_port_is_bindable():
+    import socket
+
+    port = multiproc._free_port()
+    assert 0 < port < 65536
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", port))
+
+
+def test_spawn_sets_env_and_pins_one_device():
+    """Children see the coordination env vars and exactly one XLA device."""
+    code = ("import os; assert os.environ['" + multiproc.ENV_NUM + "']=='2'; "
+            "assert '--xla_force_host_platform_device_count=1' in "
+            "os.environ['XLA_FLAGS']")
+    multiproc.spawn(2, "timeit", ["-n", "1", "-r", "1", "-s", code, "pass"])
+
+
+def test_spawn_raises_on_child_failure():
+    with pytest.raises(RuntimeError, match="exit codes"):
+        multiproc.spawn(2, "timeit", ["-s", "raise SystemExit(3)", "pass"])
+
+
+def test_shard_and_replicate_placement():
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    batch = {"x": np.arange(8.0, dtype=np.float32).reshape(4, 2)}
+    sharded = multiproc.shard_batch(batch, mesh)
+    assert sharded["x"].sharding.spec == P("data")
+    np.testing.assert_array_equal(np.asarray(sharded["x"]), batch["x"])
+    rep = multiproc.replicate({"w": np.ones((3,), np.float32)}, mesh)
+    assert rep["w"].sharding.spec == P()
+
+
+@pytest.mark.slow  # 4 process spawns with full HF jit each: ~1 min
+def test_two_process_parity_and_executed_syncs():
+    """The tentpole: same combo, 1 vs 2 real processes — loss parity,
+    identical executed collectives, blocking syncs == comm model."""
+    from benchmarks.comm_model import hf_sstep_syncs_per_iteration
+    from benchmarks.fig5_scaling import _spawn_combo
+
+    for combo, s, overlap in (("cg_s2", 2, False),
+                              ("cg_s2_overlap", 2, True)):
+        r1 = _spawn_combo(combo, 1, steps=1)
+        r2 = _spawn_combo(combo, 2, steps=1)
+        assert r1["n_processes"] == 1 and r2["n_processes"] == 2
+        assert abs(r1["final_loss"] - r2["final_loss"]) <= 1e-4 * max(
+            1.0, abs(r1["final_loss"])), (combo, r1, r2)
+        assert r1["executed"] == r2["executed"], (combo, r1, r2)
+        for st in r2["steps"]:
+            assert int(st["blocking_syncs"]) == hf_sstep_syncs_per_iteration(
+                int(st["cg_iters"]), int(st["ls_evals"]), s,
+                overlap=overlap), (combo, st)
+
+
+@pytest.mark.slow  # spawn + 2-step training loop under jit: ~1 min
+def test_train_cli_num_processes_smoke():
+    """`train --num-processes 2` re-spawns itself and completes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen1.5-0.5b",
+         "--smoke", "--num-processes", "2", "--steps", "2",
+         "--batch-size", "8", "--seq-len", "16", "--max-cg-iters", "4",
+         "--sstep", "2", "--overlap"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -1,0 +1,176 @@
+"""Overlapped-collective schedule unit tests (HFConfig.overlap).
+
+Three layers, matching the implementation split:
+  * core/sstep.py — double-buffered super-cycles: two s-iteration cycles
+    per Gram reduction (``KrylovResult.syncs`` halves), same iterates,
+  * core/line_search.py — paired Armijo: two speculative trials per
+    blocking round-trip, same accepted step,
+  * core/hf.py — the assembled step: ``metrics["blocking_syncs"]`` drops
+    to ``krylov_syncs + ceil(E/2)`` (hidden grad-reduce + paired search)
+    while the accepted update stays numerically equivalent.
+
+The executed multi-process counterpart lives in tests/test_multiproc.py
+and benchmarks/fig5_scaling.py --executed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HFConfig, hf_init, hf_step
+from repro.core.line_search import armijo
+from repro.core.sstep import sstep_bicgstab, sstep_cg
+from repro.data import classification_dataset
+from repro.models import build_mlp
+
+
+def _vec(x):
+    x = np.asarray(x, np.float32)
+    return {"a": jnp.asarray(x[:5]), "b": jnp.asarray(x[5:]).reshape(3, 3)}
+
+
+def _unvec(t):
+    return np.concatenate([np.asarray(t["a"]).ravel(),
+                           np.asarray(t["b"]).ravel()])
+
+
+def _mat_op(M):
+    def op(v):
+        f = jnp.concatenate([v["a"].ravel(), v["b"].ravel()])
+        out = M @ f
+        return {"a": out[:5], "b": out[5:].reshape(3, 3)}
+    return op
+
+
+def _spd():
+    rng = np.random.RandomState(2)
+    Q = rng.randn(14, 14).astype(np.float32)
+    M = jnp.asarray(Q @ Q.T + 14 * np.eye(14, dtype=np.float32))
+    return M, _vec(rng.randn(14)), _vec(np.zeros(14))
+
+
+class TestSolverOverlap:
+    """Double-buffered cycles: half the Gram syncs, the same iterates."""
+
+    @pytest.mark.parametrize("s,syncs,syncs_ov", [(1, 8, 4), (2, 4, 2)])
+    def test_sstep_cg_halves_syncs_same_solution(self, s, syncs, syncs_ov):
+        M, b, x0 = _spd()
+        kw = dict(lam=1.0, s=s, max_iters=8, tol=0.0)
+        base = sstep_cg(_mat_op(M), b, x0, **kw)
+        ov = sstep_cg(_mat_op(M), b, x0, overlap=True, **kw)
+        assert int(base.syncs) == syncs
+        assert int(ov.syncs) == syncs_ov
+        assert int(ov.iters) == int(base.iters) == 8
+        assert not bool(ov.breakdown)
+        np.testing.assert_allclose(_unvec(ov.x), _unvec(base.x),
+                                   rtol=1e-3, atol=5e-5)
+
+    def test_sstep_bicgstab_overlap(self):
+        # s=1: the s_run=2 chains stay inside Bi-CG-STAB's monomial f32
+        # depth budget (2s products per iteration). At s=2, overlap would
+        # need depth-8 chains — the prefix guard degrades the speculative
+        # half rather than running an unstable basis (checked below).
+        M, b, x0 = _spd()
+        kw = dict(lam=1.0, s=1, max_iters=8, tol=0.0)
+        base = sstep_bicgstab(_mat_op(M), b, x0, **kw)
+        ov = sstep_bicgstab(_mat_op(M), b, x0, overlap=True, **kw)
+        assert int(base.syncs) == 8 and int(ov.syncs) == 4
+        np.testing.assert_allclose(_unvec(ov.x), _unvec(base.x),
+                                   rtol=1e-3, atol=5e-5)
+
+    def test_sstep_bicgstab_overlap_guard_never_worse(self):
+        # Past the depth budget the guard may cancel the speculative deep
+        # half (syncs don't halve) but must never degrade the solution.
+        M, b, x0 = _spd()
+        kw = dict(lam=1.0, s=2, max_iters=8, tol=0.0)
+        base = sstep_bicgstab(_mat_op(M), b, x0, **kw)
+        ov = sstep_bicgstab(_mat_op(M), b, x0, overlap=True, **kw)
+        assert int(ov.syncs) <= int(base.syncs)
+        np.testing.assert_allclose(_unvec(ov.x), _unvec(base.x),
+                                   rtol=1e-3, atol=5e-5)
+
+
+class TestPairedArmijo:
+    """paired=True: same accepted step, ⌈E/2⌉ blocking round-trips."""
+
+    def _problem(self, scale):
+        # Quadratic bowl; delta chosen so acceptance needs backtracking
+        # when scale > 1 (alpha0=1 overshoots).
+        target = jnp.arange(1.0, 6.0)
+        params = jnp.zeros(5)
+
+        def loss_fn(p):
+            return 0.5 * jnp.sum((p - target) ** 2)
+
+        g = jax.grad(loss_fn)(params)
+        delta = -scale * g
+        return loss_fn, params, loss_fn(params), delta, jnp.vdot(g, delta)
+
+    @pytest.mark.parametrize("scale", [1.0, 3.0, 9.0])
+    def test_same_accepted_step(self, scale):
+        loss_fn, params, f0, delta, gd = self._problem(scale)
+        base = armijo(loss_fn, params, f0, delta, gd)
+        pair = armijo(loss_fn, params, f0, delta, gd, paired=True)
+        assert bool(base.success) and bool(pair.success)
+        # The paired search walks the SAME backtracking sequence alpha0,
+        # beta*alpha0, ... two-at-a-time: identical accepted alpha.
+        np.testing.assert_allclose(float(pair.alpha), float(base.alpha))
+        np.testing.assert_allclose(float(pair.f_new), float(base.f_new),
+                                   rtol=1e-6)
+        # n_evals counts trials (pairs issue two per round-trip): the
+        # blocking round-trips are ceil(n/2) <= the serial count.
+        assert (int(pair.n_evals) + 1) // 2 <= int(base.n_evals)
+
+    def test_failure_is_zero_step_both(self):
+        loss_fn, params, f0, delta, _ = self._problem(1.0)
+        # An ascent direction with a descent-slope claim: never accepted.
+        uphill = jax.tree_util.tree_map(lambda d: -d, delta)
+        for paired in (False, True):
+            r = armijo(loss_fn, params, f0, uphill, jnp.asarray(-1.0),
+                       max_backtracks=4, paired=paired)
+            assert not bool(r.success)
+            assert float(r.alpha) == 0.0
+            assert float(r.f_new) == float(f0)
+
+
+class TestHFStepOverlap:
+    """The assembled step: blocking_syncs bookkeeping + loss parity."""
+
+    @pytest.fixture(scope="class")
+    def problem(self):
+        model = build_mlp((16, 32, 4))
+        params = model.init(jax.random.PRNGKey(1))
+        data = classification_dataset(jax.random.PRNGKey(0), 32, 16, 4)
+        return model, params, data
+
+    def _run(self, problem, **cfg_kw):
+        model, params, data = problem
+        cfg = HFConfig(solver="hessian_cg", max_cg_iters=8, cg_tol=0.0,
+                       **cfg_kw)
+        _, _, m = jax.jit(
+            lambda p, s: hf_step(model.loss_fn, p, s, data, data, cfg)
+        )(params, hf_init(params, cfg))
+        return {k: float(v) for k, v in m.items()}
+
+    def test_blocking_syncs_metric(self, problem):
+        base = self._run(problem, sstep_s=2)
+        ov = self._run(problem, sstep_s=2, overlap=True)
+        assert base["blocking_syncs"] == \
+            1 + base["krylov_syncs"] + base["ls_evals"]
+        assert ov["blocking_syncs"] == \
+            ov["krylov_syncs"] + (ov["ls_evals"] + 1) // 2
+        assert ov["blocking_syncs"] < base["blocking_syncs"]
+        # Same outer problem: overlap changes the schedule, not the math.
+        np.testing.assert_allclose(ov["loss"], base["loss"], rtol=1e-5)
+        np.testing.assert_allclose(ov["loss_new"], base["loss_new"],
+                                   rtol=5e-3)
+
+    def test_overlap_at_s1_keeps_standard_solver(self, problem):
+        # s-step only engages for sstep_s > 1; at s=1 overlap still hides
+        # the grad reduce and pairs the search, but the Krylov term stays
+        # the standard solver's per-iteration round-trips.
+        base = self._run(problem)
+        ov = self._run(problem, overlap=True)
+        assert ov["krylov_syncs"] == base["krylov_syncs"] == base["cg_iters"]
+        assert ov["blocking_syncs"] == \
+            ov["krylov_syncs"] + (ov["ls_evals"] + 1) // 2
