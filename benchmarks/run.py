@@ -34,7 +34,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,kernels,"
-                         "attention,curvature,sstep,decode,scaling,roofline")
+                         "attention,curvature,sstep,decode,scaling,roofline,"
+                         "telemetry (check mode only)")
     ap.add_argument("--tiny", action="store_true",
                     help="check mode: run the JSON benches at CI-smoke "
                          "shapes (same code paths, same schema)")
@@ -47,7 +48,8 @@ def main() -> None:
 
     from benchmarks import (fig3_variants, fig4_batchsize, fig5_scaling,
                             kernels_bench, attention_bench, curvature_bench,
-                            decode_bench, roofline_table, sstep_bench)
+                            decode_bench, roofline_table, sstep_bench,
+                            telemetry_check)
 
     if args.check:
         checked = {
@@ -56,6 +58,7 @@ def main() -> None:
             "attention": attention_bench,
             "decode": decode_bench,
             "scaling": fig5_scaling,
+            "telemetry": telemetry_check,
         }
         failures = []
         for name, mod in checked.items():

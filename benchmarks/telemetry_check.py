@@ -1,0 +1,132 @@
+"""Telemetry cross-check: three independent collective counters, one truth.
+
+  PYTHONPATH=src python benchmarks/telemetry_check.py [--tiny] [--out PATH]
+
+One jitted data-parallel HF step is traced with BOTH instrumentation paths
+armed — the telemetry sink (``repro.obs.telemetry``: begin/end debug
+callbacks per executed ``preduce``) and the executed-collective counter
+(``core.collectives.count_executed``: an independent tally callback at the
+same sites) — and then executed once. The check asserts that the two
+runtime observers and the in-jit accounting agree:
+
+  1. per tag, telemetry ``coll`` span-pair count == ``count_executed``
+     per-device tally (two independent callback paths, same schedule);
+  2. the solve event's ``syncs`` == ``metrics["krylov_syncs"]`` (the
+     callback-reported and the returned-metric view of the same scalar);
+  3. ``metrics["blocking_syncs"]`` == the comm-model formula recomputed
+     from those pieces (non-overlap: ``1 + krylov_syncs + ls_evals``).
+
+If a future change makes the telemetry trace show collectives that the
+audited counter doesn't (or vice versa), this is the bench that fails.
+Results go to ``BENCH_telemetry.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+if __package__ in (None, ""):
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (_ROOT, os.path.join(_ROOT, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+import jax
+
+from repro.core import HFConfig, hf_init
+from repro.core.collectives import count_executed
+from repro.core.distributed import data_parallel_hf_step
+from repro.data import classification_dataset
+from repro.models import build_mlp
+from repro.obs import telemetry as telemetry_mod
+from repro.obs import trace as trace_mod
+
+JSON_OUT = "BENCH_telemetry.json"
+
+
+def run_bench(tiny: bool = False, out_path: str = JSON_OUT, log=print):
+    # One representative non-overlap combo (s-step CG): the blocking-sync
+    # formula is the additive one, so every executed reduce is visible to
+    # all three counters. Shapes are CI-smoke either way — this bench
+    # checks counts, not wall clock.
+    dims, B, iters = ((16, 32, 4), 16, 6) if tiny else ((64, 32, 10), 64, 8)
+    model = build_mlp(dims)
+    params = model.init(jax.random.PRNGKey(1))
+    data = classification_dataset(jax.random.PRNGKey(0), B, dims[0], dims[-1])
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    cfg = HFConfig(solver="hessian_cg", max_cg_iters=iters, cg_tol=0.0,
+                   sstep_s=2, overlap=False)
+
+    tmp = tempfile.mkdtemp(prefix="telemetry_check_")
+    sink = telemetry_mod.Telemetry(tmp, meta=dict(kind="telemetry_check"))
+    with telemetry_mod.install(sink), count_executed() as counts:
+        step = data_parallel_hf_step(model.loss_fn, mesh, cfg)
+        p, s, m = jax.jit(step)(params, hf_init(params, cfg), data)
+        jax.block_until_ready(p)
+    sink.close()
+    executed = counts.per_device(len(jax.local_devices()))
+    metrics = {k: float(v) for k, v in jax.device_get(m).items()}
+
+    events = trace_mod.load_events(tmp)
+    colls = trace_mod.collective_spans(events)
+    telemetry_counts: dict = {}
+    for c in colls:
+        telemetry_counts[c["tag"]] = telemetry_counts.get(c["tag"], 0) + 1
+    solves = [e for e in events if e["ev"] == "solve"]
+
+    result = {
+        "config": {"mlp": list(dims), "batch": B, "max_cg_iters": iters,
+                   "solver": cfg.solver, "sstep_s": cfg.sstep_s,
+                   "overlap": cfg.overlap, "tiny": tiny,
+                   "devices": len(jax.devices())},
+        "tags": {t: {"telemetry": telemetry_counts.get(t, 0),
+                     "executed": int(executed.get(t, 0))}
+                 for t in sorted(set(telemetry_counts) | set(executed))},
+        "solve_event": solves[0] if solves else None,
+        "metrics": {k: metrics[k] for k in
+                    ("krylov_syncs", "blocking_syncs", "ls_evals",
+                     "cg_iters", "sstep_fallback")},
+    }
+    log(f"telemetry check: tags={result['tags']} "
+        f"blocking={metrics['blocking_syncs']:.0f}")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    log(f"wrote {out_path}")
+    return result
+
+
+def check(result):
+    """Acceptance: the two runtime observers and the in-jit accounting all
+    describe the same executed collective schedule."""
+    tags = result["tags"]
+    assert tags, "no collectives observed at all"
+    for tag, row in tags.items():
+        assert row["telemetry"] == row["executed"], (tag, tags)
+    m = result["metrics"]
+    sol = result["solve_event"]
+    assert sol is not None, "no solve event emitted"
+    assert sol["iters"] == int(m["cg_iters"]), (sol, m)
+    assert sol["syncs"] == int(m["krylov_syncs"]), (sol, m)
+    # Non-overlap formula: grad reduce + per-cycle Gram syncs + line search.
+    assert int(m["blocking_syncs"]) == \
+        1 + int(m["krylov_syncs"]) + int(m["ls_evals"]), m
+    # The residual curve is real data: one finite entry per iteration.
+    hist = sol["residual_history"]
+    assert len(hist) == sol["iters"] and all(v == v for v in hist), sol
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--out", default=JSON_OUT)
+    args = ap.parse_args()
+    result = run_bench(tiny=args.tiny, out_path=args.out)
+    check(result)
+    print("telemetry check ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     args = ap.parse_args()
-    gen = serve(args.arch, smoke=True, batch_size=args.batch_size,
-                prompt_len=args.prompt_len, gen_len=args.gen_len)
+    gen, _ = serve(args.arch, smoke=True, batch_size=args.batch_size,
+                   prompt_len=args.prompt_len, gen_len=args.gen_len)
     print("first generated row:", gen[0].tolist())
 
 

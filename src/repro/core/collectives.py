@@ -40,6 +40,8 @@ from typing import Any, Iterator, Sequence
 import jax
 import jax.numpy as jnp
 
+from ..obs import telemetry as _telemetry
+
 # Primitive names that move data across mesh axes (psum covers pmean).
 COLLECTIVE_PRIMS = frozenset({
     "psum", "psum2", "pmin", "pmax", "ppermute", "all_gather",
@@ -106,7 +108,30 @@ def preduce(tree: Any, axes: Sequence[str] | str, tag: str = "reduce"):
             lambda _: counter.add(tag),
             jnp.zeros((), jnp.float32) * jnp.sum(leaf).astype(jnp.float32),
         )
-    return jax.lax.pmean(tree, axes)
+    sink = _telemetry.active()
+    if sink is None:
+        return jax.lax.pmean(tree, axes)
+    # Telemetry span per executed reduction: the begin callback depends
+    # only on the reduce INPUT (XLA:CPU runs it at input-ready — the
+    # earliest the collective could issue), the end callback on the reduce
+    # OUTPUT (completion). Under HFConfig.overlap the hidden grad-reduce
+    # span therefore visibly brackets the curvature primal build; the
+    # blocking schedule closes it first. Count tag is unchanged — the
+    # label (e.g. "grad_reduce" from telemetry.collective_label) only
+    # distinguishes events, so PR 7 executed-count audits stay valid.
+    label = _telemetry.current_collective_label() or tag
+    leaf_in = jax.tree_util.tree_leaves(tree)[0]
+    jax.debug.callback(
+        lambda _, _s=sink, _t=tag, _l=label: _s.collective_begin(_t, _l),
+        jnp.zeros((), jnp.float32) * jnp.sum(leaf_in).astype(jnp.float32),
+    )
+    out = jax.lax.pmean(tree, axes)
+    leaf_out = jax.tree_util.tree_leaves(out)[0]
+    jax.debug.callback(
+        lambda _, _s=sink, _t=tag, _l=label: _s.collective_end(_t, _l),
+        jnp.zeros((), jnp.float32) * jnp.sum(leaf_out).astype(jnp.float32),
+    )
+    return out
 
 
 def _sub_jaxprs(eqn) -> Iterator:

@@ -78,6 +78,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.flash_ad import second_order_active, second_order_tangents
+from ..obs import telemetry as _telemetry
 
 LossFn = Callable[[Any, Any], jax.Array]      # (params, batch) -> scalar mean
 OutFn = Callable[[Any, Any], Any]             # (params, batch) -> network output z
@@ -210,7 +211,10 @@ def make_hvp_op(
     # trace their AD-closed second-order tangent rule here — the Pallas
     # first-order rules cannot be forward-differentiated (kernels/flash_ad).
     with second_order_tangents():
-        _, lin = jax.linearize(jax.grad(scalar), params)
+        prim, lin = jax.linearize(jax.grad(scalar), params)
+    # Telemetry phase end-marker pinned to the primal pass outputs (no-op
+    # unless a sink is installed at trace time) — closes curvature_primal.
+    _telemetry.marker("curvature_primal", prim)
 
     def hvp(v):
         return _maybe_reduce(lin(_cast_like(v, params)), grad_reduce)
@@ -248,6 +252,9 @@ def shared_primal_hvp(
         (f0, g), lin = jax.linearize(
             lambda p: jax.value_and_grad(loss_fn)(p, batch), params
         )
+    # Fused grad+primal pass: one marker closes curvature_primal (there is
+    # no separate grad_build phase on the shared path).
+    _telemetry.marker("curvature_primal", f0, g)
 
     def hvp(v):
         return _maybe_reduce(lin(_cast_like(v, params))[1], grad_reduce)
@@ -273,6 +280,7 @@ def _gnvp_once(model_out_fn: OutFn, out_loss_fn: OutLossFn, params, batch) -> Op
     _, hout_lin = jax.linearize(
         lambda zz: jax.grad(out_loss_fn)(zz, batch), z
     )
+    _telemetry.marker("curvature_primal", z)
 
     def gnvp(v):
         jv = jvp_lin(v)                       # J v          (tangent forward)

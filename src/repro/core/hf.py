@@ -61,6 +61,7 @@ from .curvature import (
     shared_primal_hvp,
 )
 from ..kernels.flash_ad import second_order_tangents
+from ..obs import telemetry as _telemetry
 from .krylov import BACKENDS, get_backend
 from .line_search import armijo
 from .solvers import bicgstab, cg, hutchinson_diag, pcg, sign_correct
@@ -78,6 +79,18 @@ from .tree_math import (
 
 SOLVERS = ("gn_cg", "hessian_cg", "hybrid_cg", "bicgstab")
 SSTEP_SOLVERS = ("auto", "cg", "bicgstab")
+
+# The complete per-step metrics contract of ``hf_step``: every key it
+# returns, each a finite scalar (asserted by tests/test_telemetry.py's
+# metrics-contract test; hf_step itself checks the key set at trace time).
+# The train loop adds host-side fields on top — "step", "wall_s" and (step
+# 0 only) "compile_s" — which are NOT part of this in-jit contract.
+METRICS_SCHEMA = (
+    "loss", "loss_new", "grad_norm", "lambda", "rho", "alpha", "ls_evals",
+    "cg_iters", "cg_residual", "krylov_syncs", "blocking_syncs",
+    "sstep_fallback", "sstep_basis_fallback", "sstep_basis_degraded",
+    "nc_found", "nc_used", "nc_curv", "step_norm", "used_gn",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,42 +287,62 @@ def hf_step(
         and hvp_batch is batch
         and config.solver != "gn_cg"
     )
-    if shared:
-        f0, g, exact = shared_primal_hvp(
-            loss_fn, params, batch, grad_reduce=grad_reduce
-        )
-    else:
-        # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) --------
-        f0, g = jax.value_and_grad(loss_fn)(params, batch)
-        if grad_reduce is not None and not config.overlap:
-            g = grad_reduce(g)
-        # Only build the operators the solver will apply: in the linearized
-        # modes construction itself runs a primal pass (eagerly, outside jit).
-        if config.solver != "gn_cg":
-            exact = make_hvp_op(loss_fn, params, hvp_batch, **curv_kw)
-    if needs_gn:
-        if config.sstep_s > 1:
-            # The s-step solve lifts its operator to stacked multi-tangent
-            # blocks via jax.vmap (core/blocks.py). The flash-attention
-            # first-order GN tangent (linear_call) has no batching rule, so
-            # build the GN operator under the AD-closed second-order rules —
-            # plain jnp, vmappable, same math; a no-op for models that don't
-            # use flash attention (kernels/flash_ad.py).
-            with second_order_tangents():
+    # Telemetry (repro.obs): phase end-markers + the grad-reduce collective
+    # label. Every hook is a trace-time no-op unless a sink is installed —
+    # the disabled jaxpr is identical to the un-instrumented program
+    # (tests/test_telemetry.py). step_scope hands state.step to markers
+    # emitted from the curvature engine / s-step solvers.
+    _telemetry.marker("step_begin", batch, step=state.step)
+    with _telemetry.step_scope(state.step):
+        if shared:
+            with _telemetry.collective_label("grad_reduce"):
+                f0, g, exact = shared_primal_hvp(
+                    loss_fn, params, batch, grad_reduce=grad_reduce
+                )
+        else:
+            # ---- Alg.2 lines 3-4: full gradient (all-reduce under pjit) ----
+            f0, g = jax.value_and_grad(loss_fn)(params, batch)
+            _telemetry.marker("grad_build", f0, g, step=state.step)
+            if grad_reduce is not None and not config.overlap:
+                with _telemetry.collective_label("grad_reduce"):
+                    g = grad_reduce(g)
+                # Blocking schedule: close the reduce-wait explicitly so the
+                # reconstructed curvature-primal span starts AFTER the psum
+                # (the collective must show zero overlap with the build).
+                _telemetry.marker("grad_reduce", g, step=state.step)
+            # Only build the operators the solver will apply: in the
+            # linearized modes construction itself runs a primal pass
+            # (eagerly, outside jit).
+            if config.solver != "gn_cg":
+                exact = make_hvp_op(loss_fn, params, hvp_batch, **curv_kw)
+        if needs_gn:
+            if config.sstep_s > 1:
+                # The s-step solve lifts its operator to stacked
+                # multi-tangent blocks via jax.vmap (core/blocks.py). The
+                # flash-attention first-order GN tangent (linear_call) has no
+                # batching rule, so build the GN operator under the AD-closed
+                # second-order rules — plain jnp, vmappable, same math; a
+                # no-op for models that don't use flash attention
+                # (kernels/flash_ad.py).
+                with second_order_tangents():
+                    gn = make_gnvp_op(model_out_fn, out_loss_fn, params,
+                                      hvp_batch, **curv_kw)
+            else:
                 gn = make_gnvp_op(model_out_fn, out_loss_fn, params,
                                   hvp_batch, **curv_kw)
-        else:
-            gn = make_gnvp_op(model_out_fn, out_loss_fn, params, hvp_batch,
-                              **curv_kw)
-    if not shared and grad_reduce is not None and config.overlap:
-        # Hidden grad-reduce (overlapped schedule): the model-sized gradient
-        # all-reduce has no data dependence on the curvature engine's primal
-        # build, so issuing it AFTER the operator construction above lets
-        # the scheduler run the collective concurrently with that forward —
-        # its first consumer is the Krylov right-hand side, by which point
-        # the reduce has completed. Counted as 0 blocking round-trips in
-        # metrics["blocking_syncs"].
-        g = grad_reduce(g)
+        if not shared and grad_reduce is not None and config.overlap:
+            # Hidden grad-reduce (overlapped schedule): the model-sized
+            # gradient all-reduce has no data dependence on the curvature
+            # engine's primal build, so issuing it AFTER the operator
+            # construction above lets the scheduler run the collective
+            # concurrently with that forward — its first consumer is the
+            # Krylov right-hand side, by which point the reduce has
+            # completed. Counted as 0 blocking round-trips in
+            # metrics["blocking_syncs"]. (The telemetry span of this very
+            # collective — begin at input-ready, end at completion — is how
+            # the overlap is MEASURED: obs/trace.py grad_reduce_overlap.)
+            with _telemetry.collective_label("grad_reduce"):
+                g = grad_reduce(g)
     if config.solver == "gn_cg":
         G = gn
     elif config.solver in ("hessian_cg", "bicgstab"):
@@ -345,33 +378,40 @@ def hf_step(
         m_inv = jax.tree_util.tree_map(
             lambda d: 1.0 / (jnp.abs(d) + lam) ** config.precond_alpha, diag
         )
-    if config.sstep_s > 1:
-        # s-step (communication-avoiding) solve: ONE Gram reduction per
-        # cycle of sstep_s iterations, basis power chains paired into
-        # width-2 block curvature products derived from the SAME cached
-        # linearization as A (core.blocks.block_op_from_single — jax.vmap
-        # over the operator, no second primal pass). Falls back to the
-        # standard solver on basis-conditioning breakdown.
-        kind = config.sstep_solver
-        if kind == "auto":
-            kind = "bicgstab" if config.solver == "bicgstab" else "cg"
-        sstep_fn = sstep_bicgstab if kind == "bicgstab" else sstep_cg
-        res = sstep_fn(
-            A, b, x0, lam=lam, s=config.sstep_s,
-            max_iters=config.max_cg_iters, tol=config.cg_tol,
-            backend=krylov_be, A_block=block_op_from_single(A),
-            basis=config.sstep_basis, overlap=config.overlap,
-        )
-    elif config.solver == "bicgstab":
-        res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
-                       tol=config.cg_tol, M_inv=m_inv, backend=krylov_be)
-    elif m_inv is not None:
-        res = pcg(A, b, x0, lam=lam, M_inv=m_inv,
-                  max_iters=config.max_cg_iters, tol=config.cg_tol,
-                  backend=krylov_be)
-    else:
-        res = cg(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
-                 tol=config.cg_tol, backend=krylov_be)
+    with _telemetry.step_scope(state.step):
+        if config.sstep_s > 1:
+            # s-step (communication-avoiding) solve: ONE Gram reduction per
+            # cycle of sstep_s iterations, basis power chains paired into
+            # width-2 block curvature products derived from the SAME cached
+            # linearization as A (core.blocks.block_op_from_single — jax.vmap
+            # over the operator, no second primal pass). Falls back to the
+            # standard solver on basis-conditioning breakdown.
+            kind = config.sstep_solver
+            if kind == "auto":
+                kind = "bicgstab" if config.solver == "bicgstab" else "cg"
+            sstep_fn = sstep_bicgstab if kind == "bicgstab" else sstep_cg
+            res = sstep_fn(
+                A, b, x0, lam=lam, s=config.sstep_s,
+                max_iters=config.max_cg_iters, tol=config.cg_tol,
+                backend=krylov_be, A_block=block_op_from_single(A),
+                basis=config.sstep_basis, overlap=config.overlap,
+            )
+        elif config.solver == "bicgstab":
+            res = bicgstab(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
+                           tol=config.cg_tol, M_inv=m_inv, backend=krylov_be)
+        elif m_inv is not None:
+            res = pcg(A, b, x0, lam=lam, M_inv=m_inv,
+                      max_iters=config.max_cg_iters, tol=config.cg_tol,
+                      backend=krylov_be)
+        else:
+            res = cg(A, b, x0, lam=lam, max_iters=config.max_cg_iters,
+                     tol=config.cg_tol, backend=krylov_be)
+    _telemetry.marker("krylov_solve", res.residual, res.x, step=state.step)
+    _telemetry.solve_event(
+        state.step, iters=res.iters, residual=res.residual, syncs=res.syncs,
+        residual_history=res.residual_history, nc_found=res.nc_found,
+        breakdown=res.breakdown,
+    )
 
     # ---- Alg.2 line 7: best descent direction among {solution, NC dir} -----
     # Quadratic-model values come FREE from solver byproducts — no extra
@@ -421,6 +461,7 @@ def hf_step(
         c=config.ls_c, beta=config.ls_beta, max_backtracks=config.max_backtracks,
         paired=config.overlap,
     )
+    _telemetry.marker("line_search", ls.alpha, ls.f_new, step=state.step)
 
     # ---- Alg.2 lines 8,10: LM damping + parameter update --------------------
     # predicted reduction of the STEP TAKEN: m(αδ) = α·gᵀδ + α²·½δᵀAδ
@@ -443,6 +484,7 @@ def hf_step(
     new_state = HFState(
         lam=lam_new, prev_delta=delta_taken, use_gn=use_gn_next, step=state.step + 1
     )
+    _telemetry.marker("update_damping", lam_new, rho, new_params, step=state.step)
     metrics = {
         "loss": f0,
         "loss_new": ls.f_new,
@@ -491,4 +533,8 @@ def hf_step(
         "step_norm": tree_norm(delta_taken),
         "used_gn": state.use_gn,
     }
+    # Trace-time contract: the metrics dict and the published schema move in
+    # lockstep (tests/test_telemetry.py::test_metrics_contract).
+    assert set(metrics) == set(METRICS_SCHEMA), sorted(
+        set(metrics) ^ set(METRICS_SCHEMA))
     return new_params, new_state, metrics

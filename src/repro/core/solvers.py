@@ -104,6 +104,16 @@ class KrylovResult(NamedTuple):
                            # exhibits identically and which the s-step form
                            # merely reports through the same fallback path.
                            # Always False for the standard recurrences.
+    residual_history: Any = None
+                           # (max_iters,) f32: ‖r‖ after each executed
+                           # iteration, NaN beyond ``iters`` (and at a
+                           # Bi-CG-STAB breakdown slot, where the frozen
+                           # iterate has no new residual). Written from the
+                           # existing loop carries — no extra reductions —
+                           # and surfaced per outer step as a telemetry
+                           # solve event (repro.obs). For the s-step
+                           # fallback path the standard solve's curve is
+                           # appended after the partial s-step one.
 
 
 def _resolve(backend):
@@ -126,11 +136,11 @@ def _cg_engine(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float,
     rz0, rr0 = be.dot2(z0, r0)  # (<z0,r0>, <r0,r0>); equal for identity M
 
     def cond(carry):
-        (_, _, _, _, _, k, done, _) = carry
+        (_, _, _, _, _, k, done, _, _) = carry
         return jnp.logical_and(k < max_iters, jnp.logical_not(done))
 
     def body(carry):
-        x, r, p, rz, rr, k, done, nc = carry
+        x, r, p, rz, rr, k, done, nc, hist = carry
         Ap = A_(p)
         pAp, p_sq = be.dot2(Ap, p)
         nc = nc_probe(be, p, pAp, p_sq, lam, nc)
@@ -151,20 +161,25 @@ def _cg_engine(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float,
         p = be.where(trunc, p, p_new)
         rz_out = jnp.where(trunc, rz, rz_new)
         rr_out = jnp.where(trunc, rr, rr_new)
+        # Residual curve from the carried scalar — no extra reductions
+        # (rr_out is the frozen pre-step value on a truncation iteration).
+        hist = hist.at[k].set(jnp.sqrt(rr_out))
         done_new = jnp.logical_or(trunc, jnp.sqrt(rr_new) < tol * b_norm)
-        return (x, r, p, rz_out, rr_out, k + 1, done_new, nc)
+        return (x, r, p, rz_out, rr_out, k + 1, done_new, nc, hist)
 
     init = (
         x0_, r0, z0, rz0, rr0, jnp.zeros((), jnp.int32),
         jnp.sqrt(rr0) < tol * b_norm, nc_init(be, b_),
+        jnp.full((max_iters,), jnp.nan, jnp.float32),
     )
-    x, r, _, _, rr, k, _, nc = jax.lax.while_loop(cond, body, init)
+    x, r, _, _, rr, k, _, nc, hist = jax.lax.while_loop(cond, body, init)
     # (P)CG on the (damped, PSD-unless-truncated) system is φ-monotone:
     # best == last. One blocking reduction per iteration (the dots that
     # produce α/β gate the next step): syncs == iters.
     x, r, nc_dir = be.lower(x), be.lower(r), be.lower(nc.dir)
     return KrylovResult(x, r, x, r, nc_dir, nc.found, nc.curv, k, jnp.sqrt(rr),
-                        syncs=k, breakdown=jnp.zeros((), bool))
+                        syncs=k, breakdown=jnp.zeros((), bool),
+                        residual_history=hist)
 
 
 def cg(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
@@ -215,11 +230,11 @@ def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
     r0_star = r0
 
     def cond(carry):
-        (_, _, _, _, k, done, _, _, _) = carry
+        (_, _, _, _, k, done, _, _, _, _) = carry
         return jnp.logical_and(k < max_iters, jnp.logical_not(done))
 
     def body(carry):
-        x, r, p, rho, k, done, nc, best, broke = carry
+        x, r, p, rho, k, done, nc, best, broke, hist = carry
         phat = prec(p)
         v = A_(phat)                                     # A p̂_j
         v_phat, phat_sq = be.dot2(v, phat)
@@ -249,20 +264,26 @@ def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
         # free CG-backtracking: track the best-model iterate
         phi = phi_value(be, b_, x, r)
         best = best_update(be, x, r, phi, jnp.logical_not(breakdown), best)
+        # On a breakdown iteration the iterate is frozen and rr_new is
+        # meaningless — leave that slot NaN.
+        hist = hist.at[k].set(jnp.where(
+            breakdown, jnp.nan, jnp.sqrt(jnp.maximum(rr_new, 0.0))))
         done_new = jnp.logical_or(breakdown, jnp.sqrt(rr_new) < tol * b_norm)
         return (x, r, p, rho_out, k + 1, done_new, nc, best,
-                jnp.logical_or(broke, breakdown))
+                jnp.logical_or(broke, breakdown), hist)
 
     init = (
         x0_, r0, r0, be.dot(r0, r0_star), jnp.zeros((), jnp.int32),
         be.norm(r0) < tol * b_norm, nc_init(be, b_), best_init(be, b_, x0_, r0),
         jnp.zeros((), bool),
+        jnp.full((max_iters,), jnp.nan, jnp.float32),
     )
-    x, r, _, _, k, _, nc, best, broke = jax.lax.while_loop(cond, body, init)
+    (x, r, _, _, k, _, nc, best, broke,
+     hist) = jax.lax.while_loop(cond, body, init)
     return KrylovResult(
         be.lower(x), be.lower(r), be.lower(best.x), be.lower(best.r),
         be.lower(nc.dir), nc.found, nc.curv, k, be.norm(r),
-        syncs=k, breakdown=broke,
+        syncs=k, breakdown=broke, residual_history=hist,
     )
 
 

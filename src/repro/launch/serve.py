@@ -34,7 +34,12 @@ from ..models.kv_paged import pages_needed, release_slots
 
 
 def serve(arch: str, *, smoke=True, batch_size=4, prompt_len=16, gen_len=16,
-          log_fn=print):
+          telemetry=None, log_fn=print):
+    """Batch-at-once greedy decode. Returns (tokens, stats) — stats carries
+    the same timing the log line prints (prefill_s, decode_s, tok/s), and
+    when a ``repro.obs.telemetry.Telemetry`` sink is passed the phases are
+    ALSO emitted as telemetry spans (``log_fn`` keeps working either way —
+    the sink is structured output, not a replacement for the log)."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -50,33 +55,48 @@ def serve(arch: str, *, smoke=True, batch_size=4, prompt_len=16, gen_len=16,
     decode = jax.jit(model.decode_step, donate_argnums=(3,))
 
     out = np.zeros((batch_size, gen_len), np.int32)
-    t0 = time.time()
+    t_start = time.time()
     logits, cache = prefill(params, prompt)
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
+    jax.block_until_ready(tok)
+    t_mid = time.time()
+    t_prefill = t_mid - t_start
 
     offset = cfg.n_vision_tokens if cfg.family == "vlm" else 0
     out[:, 0] = np.asarray(tok[:, 0])
-    t0 = time.time()
     for i in range(gen_len - 1):
         t = jnp.asarray(prompt_len + offset + i, jnp.int32)
         logits, cache = decode(params, tok, t, cache)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out[:, i + 1] = np.asarray(tok[:, 0])
     jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    t_end = time.time()
+    t_decode = t_end - t_mid
     n_tok = batch_size * gen_len            # every generated token counts
+    stats = {"prefill_s": t_prefill, "decode_s": t_decode,
+             "n_tok": n_tok,
+             "tok_per_s": n_tok / max(t_prefill + t_decode, 1e-9),
+             "tok_per_s_decode":
+                 batch_size * (gen_len - 1) / max(t_decode, 1e-9)}
+    if telemetry is not None:
+        telemetry.emit({"ev": "span", "name": "prefill", "t0": t_start,
+                        "t1": t_mid, "batch": batch_size,
+                        "prompt_len": prompt_len})
+        telemetry.emit({"ev": "span", "name": "decode", "t0": t_mid,
+                        "t1": t_end, "batch": batch_size,
+                        "gen_len": gen_len})
+        telemetry.counter("tok_per_s", stats["tok_per_s"])
     log_fn(f"prefill {prompt_len} toks x{batch_size}: {t_prefill:.3f}s; "
            f"decode {gen_len - 1} steps: {t_decode:.3f}s "
-           f"({n_tok / max(t_prefill + t_decode, 1e-9):.1f} tok/s end-to-end, "
-           f"{batch_size * (gen_len - 1) / max(t_decode, 1e-9):.1f} tok/s decode)")
-    return out
+           f"({stats['tok_per_s']:.1f} tok/s end-to-end, "
+           f"{stats['tok_per_s_decode']:.1f} tok/s decode)")
+    return out, stats
 
 
 def serve_continuous(arch: str, *, smoke=True, batch_size=4, n_requests=8,
                      prompt_len=16, gen_len=16, arrival_steps=None,
                      gen_lens=None, prompts=None, page_size=8, n_pages=None,
-                     gang=False, log_fn=print):
+                     gang=False, telemetry=None, log_fn=print):
     """Continuous batching over the paged cache.
 
     ``arrival_steps``: per-request decode-step at which it may be admitted
@@ -124,6 +144,10 @@ def serve_continuous(arch: str, *, smoke=True, batch_size=4, n_requests=8,
     n_gen = [0] * B
     tok = jnp.zeros((B, 1), jnp.int32)
     next_req, done, step = 0, 0, 0
+    # Per-request telemetry bookkeeping: admit wall-clock + time-to-first-
+    # token (prefill returns the first token, so TTFT closes with it).
+    req_t0 = [None] * n_requests
+    req_ttft = [None] * n_requests
     t0 = time.time()
     while done < n_requests:
         # ---- admit arrived requests into free slots (capacity permitting);
@@ -138,12 +162,22 @@ def serve_continuous(arch: str, *, smoke=True, batch_size=4, n_requests=8,
             if int(cache.n_free) < need_pages + 1:
                 break                       # backpressure: wait for frees
             pbatch = {"tokens": prompts[next_req]}
+            req_t0[next_req] = time.time()
             logits, cache = prefill_j(params, pbatch, cache, jnp.asarray(b))
             t0k = jnp.argmax(logits[0, -1]).astype(jnp.int32)
             tok = tok.at[b, 0].set(t0k)
             slot_req[b], n_gen[b] = next_req, 1
-            out[next_req, 0] = int(t0k)
+            out[next_req, 0] = int(t0k)     # host sync: first token is real
+            req_ttft[next_req] = time.time() - req_t0[next_req]
             next_req += 1
+        if telemetry is not None:
+            # Scheduler-state counters, once per step clock tick: requests
+            # arrived but not yet admitted, and the page-pool headroom the
+            # admission backpressure tests against.
+            queued = sum(1 for r in range(next_req, n_requests)
+                         if arrival_steps[r] <= step)
+            telemetry.counter("queue_depth", queued)
+            telemetry.counter("pages_free", int(cache.n_free))
         active_h = [slot_req[b] >= 0 for b in range(B)]
         if not any(active_h):
             step += 1                       # idle: nothing arrived yet
@@ -159,6 +193,12 @@ def serve_continuous(arch: str, *, smoke=True, batch_size=4, n_requests=8,
             out[slot_req[b], n_gen[b]] = int(tok[b, 0])
             n_gen[b] += 1
             if n_gen[b] == gen_lens[slot_req[b]]:   # finished: free slot + pages
+                rid = slot_req[b]
+                if telemetry is not None:
+                    telemetry.emit({
+                        "ev": "span", "name": "request", "req": rid,
+                        "slot": b, "t0": req_t0[rid], "t1": time.time(),
+                        "ttft_s": req_ttft[rid], "n_tok": gen_lens[rid]})
                 retire.append(b)
                 done += 1
                 slot_req[b] = -1
@@ -190,15 +230,33 @@ def main():
     ap.add_argument("--continuous", action="store_true",
                     help="slot-scheduled continuous batching (paged cache)")
     ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write serving telemetry (request spans with "
+                         "TTFT, queue-depth / page-pool counters) as "
+                         "events-p0.jsonl + merged trace.json; inspect "
+                         "with python -m repro.obs.report DIR")
     args = ap.parse_args()
+    sink = None
+    if args.telemetry_dir:
+        from ..obs import telemetry as telemetry_mod
+        sink = telemetry_mod.Telemetry(
+            args.telemetry_dir,
+            meta=dict(kind="serve", arch=args.arch,
+                      continuous=args.continuous))
     if args.continuous:
         gen, _ = serve_continuous(
             args.arch, smoke=args.smoke, batch_size=args.batch_size,
             n_requests=args.n_requests, prompt_len=args.prompt_len,
-            gen_len=args.gen_len)
+            gen_len=args.gen_len, telemetry=sink)
     else:
-        gen = serve(args.arch, smoke=args.smoke, batch_size=args.batch_size,
-                    prompt_len=args.prompt_len, gen_len=args.gen_len)
+        gen, _ = serve(args.arch, smoke=args.smoke,
+                       batch_size=args.batch_size,
+                       prompt_len=args.prompt_len, gen_len=args.gen_len,
+                       telemetry=sink)
+    if sink is not None:
+        sink.close()
+        from ..obs import trace as trace_mod
+        trace_mod.merge_dir(args.telemetry_dir)
     print("generated token ids (first row):", gen[0].tolist())
 
 

@@ -18,6 +18,7 @@ gradient reduce, paired line search).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -30,6 +31,8 @@ from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..configs import ARCH_IDS, HFOptConfig, get_config, get_smoke_config
 from ..data import lm_batch
 from ..models import build_model
+from ..obs import telemetry as telemetry_mod
+from ..obs import trace as trace_mod
 from ..optim import make_optimizer
 from . import multiproc
 from .mesh import make_data_mesh
@@ -58,6 +61,7 @@ def train(
     distributed: bool = False,
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
+    telemetry_dir: str | None = None,
     log_fn=print,
 ):
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
@@ -105,18 +109,57 @@ def train(
         params = multiproc.replicate(params, mesh)
         state = multiproc.replicate(state, mesh)
 
+    # Telemetry (repro.obs): per-process JSONL sink. The sink must be
+    # installed while the step function is TRACED — the in-jit hooks are
+    # trace-time, so a program compiled outside the install context never
+    # fires a callback (zero-cost when --telemetry-dir is absent).
+    sink = None
+    if telemetry_dir:
+        sink = telemetry_mod.Telemetry(
+            telemetry_dir, process_index=jax.process_index(),
+            meta=dict(kind="train", arch=arch, solver=solver, steps=steps,
+                      batch_size=batch_size, seq_len=seq_len, sstep=sstep,
+                      overlap=overlap, processes=jax.process_count()),
+        )
+
     step_fn = jax.jit(opt.step)
+    compiled = None
     history = []
     for i in range(start, steps):
         batch = lm_batch(jax.random.fold_in(key, 1000 + i), cfg, batch_size, seq_len)
         if mesh is not None:
             batch = multiproc.shard_batch(batch, mesh)
-        t0 = time.time()
-        params, state, metrics = step_fn(params, state, batch)
-        metrics = {k: float(v) for k, v in metrics.items()}
+        if compiled is None:
+            # AOT split: trace under the telemetry install context (hooks are
+            # trace-time), then time XLA compilation separately so step 0's
+            # wall_s measures the step, not the compile.
+            install = (telemetry_mod.install(sink) if sink is not None
+                       else contextlib.nullcontext())
+            tc = time.time()
+            with install:
+                lowered = step_fn.lower(params, state, batch)
+            compiled = lowered.compile()
+            compile_s = round(time.time() - tc, 3)
+            if sink is not None:
+                sink.emit({"ev": "span", "name": "compile", "t0": tc,
+                           "t1": time.time(), "step": i})
+        host_span = (sink.span("host_step", step=i) if sink is not None
+                     else contextlib.nullcontext())
+        with host_span:
+            t0 = time.time()
+            params, state, metrics = compiled(params, state, batch)
+            # One sync point + one host transfer for the whole metrics dict
+            # (the old per-key float() forced a device round-trip per entry).
+            jax.block_until_ready((params, state, metrics))
+            wall_s = round(time.time() - t0, 3)
+            metrics = {k: float(v) for k, v in jax.device_get(metrics).items()}
         metrics["step"] = i
-        metrics["wall_s"] = round(time.time() - t0, 3)
+        metrics["wall_s"] = wall_s
+        if i == start:
+            metrics["compile_s"] = compile_s
         history.append(metrics)
+        if sink is not None:
+            sink.counter("loss", metrics["loss"])
         log_fn(
             f"step {i:4d} loss {metrics['loss']:.4f} |g| {metrics['grad_norm']:.3f}"
             + (f" λ {metrics['lambda']:.3g} α {metrics['alpha']:.2f} cg {metrics['cg_iters']:.0f}"
@@ -125,6 +168,17 @@ def train(
         if (ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0
                 and (mesh is None or multiproc.is_primary())):
             save_checkpoint(ckpt_dir, i + 1, params, state)
+    if sink is not None:
+        sink.close()
+        if mesh is not None and jax.process_count() > 1:
+            # Every process must have flushed its events file before the
+            # primary merges; the barrier also keeps non-primaries alive
+            # until the merge can read their output.
+            from jax.experimental import multihost_utils
+            multihost_utils.sync_global_devices("telemetry_flush")
+        if mesh is None or multiproc.is_primary():
+            out = trace_mod.merge_dir(telemetry_dir)
+            log_fn(f"telemetry: merged trace at {out}")
     return params, state, history
 
 
@@ -187,6 +241,13 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--history-out", default=None)
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write per-process telemetry (events-p{N}.jsonl: "
+                         "phase spans, executed-collective begin/end times, "
+                         "Krylov solve summaries) and, on the primary at "
+                         "exit, the merged Chrome/Perfetto trace.json; "
+                         "omit for zero-cost (no callbacks compiled in). "
+                         "Inspect with python -m repro.obs.report DIR")
     args = ap.parse_args()
 
     if args.num_processes > 1 and not multiproc.active():
@@ -207,6 +268,7 @@ def main():
         overlap=args.overlap,
         distributed=multiproc.active(),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        telemetry_dir=args.telemetry_dir,
     )
     if args.history_out and (not multiproc.active() or multiproc.is_primary()):
         os.makedirs(os.path.dirname(args.history_out) or ".", exist_ok=True)

@@ -1,0 +1,17 @@
+"""Observability: structured telemetry sink, Perfetto trace merge, report CLI.
+
+The in-jit side (phase markers, collective begin/end timestamps, solve
+events) lives in :mod:`repro.obs.telemetry` and is wired into the core
+modules behind a trace-time ``install`` context — when no sink is installed
+nothing is traced in and the optimizer jaxpr is byte-identical to the
+un-instrumented program (tests/test_telemetry.py asserts this).
+
+Host-side artifacts:
+
+  * ``events-p{N}.jsonl`` — one JSON object per line, per process.
+  * ``trace.json`` — Chrome/Perfetto trace merged across processes
+    (:mod:`repro.obs.trace`), pid = process index, tid = event lane.
+  * ``python -m repro.obs.report <dir>`` — phase breakdown, collective
+    timeline, solve-convergence summary.
+"""
+from . import telemetry, trace  # noqa: F401

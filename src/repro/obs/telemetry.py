@@ -1,0 +1,268 @@
+"""Per-process structured telemetry sink + trace-time instrumentation hooks.
+
+Two halves:
+
+  * **Host side** — :class:`Telemetry` appends JSON events to
+    ``events-p{N}.jsonl`` (one object per line) and offers a wall-clock
+    ``span`` context manager plus instant/counter emitters for host code
+    (train loop, serve scheduler).
+
+  * **In-jit side** — module-level trace-time state, following the
+    ``core.collectives.count_executed`` pattern: while a sink is installed
+    via :func:`install`, tracing the optimizer step bakes in
+    ``jax.debug.callback`` timestamps — phase end-markers, collective
+    begin/end pairs (see ``core.collectives.preduce``), Krylov solve
+    summaries, per-cycle Ritz snapshots. With no sink installed **nothing
+    is traced in**: every hook checks ``_active`` at trace time and
+    returns before touching jax, so the disabled jaxpr is identical to the
+    un-instrumented program (zero-cost-off; asserted in
+    tests/test_telemetry.py).
+
+Timing semantics on XLA:CPU: custom calls run synchronously in the compute
+thread, so a callback's ``time.time()`` is the executor's actual schedule
+position. A collective's begin callback depends only on the reduce *input*
+(fires at input-ready = earliest possible issue time) and its end callback
+on the reduce *output* (fires at completion) — under ``HFConfig.overlap``
+the hidden grad-reduce span therefore visibly brackets the curvature
+primal build, while the blocking schedule closes it before the primal
+starts. That schedule difference is the PR's headline measurement.
+
+Every callback operand is multiplied by ``0 * sum(dep)`` so it stays
+data-dependent (can't be constant-folded or hoisted past the value it
+brackets) while adding no numerics.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Optional
+
+__all__ = [
+    "Telemetry", "install", "active", "collective_label",
+    "current_collective_label", "step_scope", "marker", "solve_event",
+    "ritz_event",
+]
+
+
+class Telemetry:
+    """Append-only JSONL event sink for one process.
+
+    Thread-safe: jax debug callbacks may land on a runtime thread while the
+    host loop emits spans. Events are flushed line-by-line so a crashed or
+    killed process still leaves a parseable file.
+    """
+
+    def __init__(self, out_dir: str, process_index: int = 0,
+                 meta: Optional[dict] = None):
+        os.makedirs(out_dir, exist_ok=True)
+        self.out_dir = out_dir
+        self.process_index = process_index
+        self.path = os.path.join(out_dir, f"events-p{process_index}.jsonl")
+        self._lock = threading.Lock()
+        self._f = open(self.path, "a", buffering=1)
+        # Pending collective begins, FIFO per (tag, label). On CPU same-tag
+        # reduces are serialized by data dependence, so FIFO pairing is
+        # faithful; a leftover begin (e.g. process killed mid-step) is
+        # dropped at close().
+        self._pending: dict = {}
+        self.emit({"ev": "meta", "process": process_index,
+                   "ts": time.time(), **(meta or {})})
+
+    # -- raw emission ----------------------------------------------------
+    def emit(self, event: dict) -> None:
+        line = json.dumps(event, separators=(",", ":"), default=float)
+        with self._lock:
+            self._f.write(line + "\n")
+
+    # -- host-side API ---------------------------------------------------
+    @contextlib.contextmanager
+    def span(self, name: str, **fields):
+        t0 = time.time()
+        try:
+            yield
+        finally:
+            t1 = time.time()
+            self.emit({"ev": "span", "name": name, "t0": t0, "t1": t1,
+                       **fields})
+
+    def instant(self, name: str, **fields) -> None:
+        self.emit({"ev": "instant", "name": name, "ts": time.time(),
+                   **fields})
+
+    def counter(self, name: str, value, ts: Optional[float] = None) -> None:
+        self.emit({"ev": "counter", "name": name, "value": float(value),
+                   "ts": time.time() if ts is None else ts})
+
+    def log(self, msg: str) -> None:
+        self.emit({"ev": "log", "msg": str(msg), "ts": time.time()})
+
+    # -- in-jit callback receivers --------------------------------------
+    def phase_event(self, name: str, step: int) -> None:
+        self.emit({"ev": "phase", "name": name, "step": int(step),
+                   "ts": time.time()})
+
+    def collective_begin(self, tag: str, label: str) -> None:
+        key = (tag, label)
+        with self._lock:
+            self._pending.setdefault(key, deque()).append(time.time())
+
+    def collective_end(self, tag: str, label: str) -> None:
+        t1 = time.time()
+        key = (tag, label)
+        with self._lock:
+            q = self._pending.get(key)
+            t0 = q.popleft() if q else t1
+        self.emit({"ev": "coll", "tag": tag, "label": label,
+                   "t0": t0, "t1": t1})
+
+    def solve_event(self, step: int, **fields) -> None:
+        self.emit({"ev": "solve", "step": int(step), "ts": time.time(),
+                   **fields})
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.flush()
+                self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# -- trace-time state (checked when the step function is TRACED) ---------
+_active: Optional[Telemetry] = None
+_labels: list = []        # collective_label stack (trace-time)
+_steps: list = []         # step_scope stack of traced step arrays
+
+
+def active() -> Optional[Telemetry]:
+    """The installed sink, or None. Checked at trace time by every hook."""
+    return _active
+
+
+@contextlib.contextmanager
+def install(sink: Telemetry):
+    """Trace optimizer steps inside this context to bake telemetry
+    callbacks into the jitted program. The callbacks close over ``sink``
+    and keep writing to it on every execution of the compiled step, even
+    after the context exits (same lifetime rule as ``count_executed``)."""
+    global _active
+    prev = _active
+    _active = sink
+    try:
+        yield sink
+    finally:
+        _active = prev
+
+
+@contextlib.contextmanager
+def collective_label(label: str):
+    """Relabel telemetry events for preduce calls traced inside this
+    context (e.g. the gradient all-reduce, whose count tag stays
+    ``grad_hvp`` so PR 7 executed-count audits are untouched)."""
+    _labels.append(label)
+    try:
+        yield
+    finally:
+        _labels.pop()
+
+
+def current_collective_label() -> Optional[str]:
+    return _labels[-1] if _labels else None
+
+
+@contextlib.contextmanager
+def step_scope(step):
+    """Provide the traced outer-step index to markers emitted from code
+    (e.g. the curvature engine) that has no access to ``HFState``."""
+    _steps.append(step)
+    try:
+        yield
+    finally:
+        _steps.pop()
+
+
+def _dep_scalar(deps):
+    """A zero f32 scalar data-dependent on every leaf of ``deps`` — the
+    callback operand that pins a marker to its phase's outputs."""
+    import jax
+    import jax.numpy as jnp
+    total = jnp.zeros((), jnp.float32)
+    for d in deps:
+        for leaf in jax.tree_util.tree_leaves(d):
+            total = total + jnp.sum(leaf).astype(jnp.float32)
+    return jnp.zeros((), jnp.float32) * total
+
+
+def marker(name: str, *deps, step=None) -> None:
+    """Emit a phase end-marker callback, data-dependent on ``deps``.
+
+    No-op (nothing traced) when no sink is installed. The marker closes
+    the phase named ``name``; trace.py reconstructs phase spans as the
+    interval between consecutive markers of one (process, step).
+    """
+    sink = _active
+    if sink is None:
+        return
+    import jax
+    import jax.numpy as jnp
+    if step is None:
+        step = _steps[-1] if _steps else jnp.int32(-1)
+
+    def _cb(s, _unused, _sink=sink, _name=name):
+        _sink.phase_event(_name, int(s))
+
+    jax.debug.callback(_cb, step, _dep_scalar(deps))
+
+
+def solve_event(step, *, iters, residual, syncs, residual_history,
+                nc_found, breakdown) -> None:
+    """Emit the per-step Krylov solve summary (iteration count, final
+    residual, per-iteration residual curve). No-op when no sink."""
+    sink = _active
+    if sink is None:
+        return
+    import jax
+    import numpy as np
+
+    def _cb(s, it, res, sy, hist, nc, brk, _sink=sink):
+        h = np.asarray(hist, dtype=np.float64)
+        h = h[np.isfinite(h)]
+        _sink.solve_event(
+            int(s), iters=int(it), residual=float(res), syncs=int(sy),
+            residual_history=[round(float(v), 8) for v in h],
+            nc_found=bool(nc), breakdown=bool(brk))
+
+    jax.debug.callback(_cb, step, iters, residual, syncs,
+                       residual_history, nc_found, breakdown)
+
+
+def ritz_event(ritz, ok, *, basis: str) -> None:
+    """Per-cycle Ritz-value snapshot from the adaptive s-step Gram
+    (free: the eigenvalues are already computed to refresh the basis).
+    No-op when no sink; otherwise fires once per executed cycle."""
+    sink = _active
+    if sink is None:
+        return
+    import jax
+    import numpy as np
+    step = _steps[-1] if _steps else None
+
+    def _cb(s, vals, okv, _sink=sink, _basis=basis):
+        v = np.asarray(vals, dtype=np.float64)
+        _sink.emit({"ev": "ritz", "step": int(s), "basis": _basis,
+                    "ok": bool(okv), "ts": time.time(),
+                    "values": [round(float(x), 8) for x in v.ravel()]})
+
+    import jax.numpy as jnp
+    if step is None:
+        step = jnp.int32(-1)
+    jax.debug.callback(_cb, step, ritz, ok)

@@ -47,8 +47,8 @@ def test_continuous_matches_batch_at_once():
     from repro.launch.serve import serve, serve_continuous
 
     S, gen, n_req = 8, 5, 3
-    ref = serve("qwen2-1.5b", smoke=True, batch_size=n_req, prompt_len=S,
-                gen_len=gen, log_fn=lambda *a: None)
+    ref, _ = serve("qwen2-1.5b", smoke=True, batch_size=n_req, prompt_len=S,
+                   gen_len=gen, log_fn=lambda *a: None)
     got, stats = serve_continuous(
         "qwen2-1.5b", smoke=True, batch_size=2, n_requests=n_req,
         prompt_len=S, gen_len=gen, arrival_steps=[0, 0, 2],

@@ -135,10 +135,11 @@ class TestCheckpoint:
 class TestServing:
     def test_greedy_decode_deterministic(self):
         from repro.launch.serve import serve
-        g1 = serve("qwen2-1.5b", smoke=True, batch_size=2, prompt_len=8,
-                   gen_len=4, log_fn=lambda *a: None)
-        g2 = serve("qwen2-1.5b", smoke=True, batch_size=2, prompt_len=8,
-                   gen_len=4, log_fn=lambda *a: None)
+        g1, s1 = serve("qwen2-1.5b", smoke=True, batch_size=2, prompt_len=8,
+                       gen_len=4, log_fn=lambda *a: None)
+        g2, s2 = serve("qwen2-1.5b", smoke=True, batch_size=2, prompt_len=8,
+                       gen_len=4, log_fn=lambda *a: None)
+        assert s1["n_tok"] == 8 and s1["prefill_s"] > 0 and s1["decode_s"] > 0
         np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
 
     @pytest.mark.slow  # full launch.train driver: model build + several steps
