@@ -35,7 +35,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,kernels,"
                          "attention,curvature,sstep,decode,scaling,roofline,"
-                         "telemetry (check mode only)")
+                         "telemetry,chaos (check mode only)")
     ap.add_argument("--tiny", action="store_true",
                     help="check mode: run the JSON benches at CI-smoke "
                          "shapes (same code paths, same schema)")
@@ -47,9 +47,9 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig3_variants, fig4_batchsize, fig5_scaling,
-                            kernels_bench, attention_bench, curvature_bench,
-                            decode_bench, roofline_table, sstep_bench,
-                            telemetry_check)
+                            kernels_bench, attention_bench, chaos_check,
+                            curvature_bench, decode_bench, roofline_table,
+                            sstep_bench, telemetry_check)
 
     if args.check:
         checked = {
@@ -59,6 +59,7 @@ def main() -> None:
             "decode": decode_bench,
             "scaling": fig5_scaling,
             "telemetry": telemetry_check,
+            "chaos": chaos_check,
         }
         failures = []
         for name, mod in checked.items():

@@ -1,3 +1,21 @@
-from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .checkpoint import (
+    CheckpointCorruptError,
+    CheckpointError,
+    CheckpointMismatchError,
+    all_steps,
+    config_fingerprint,
+    latest_step,
+    latest_valid_step,
+    restore_checkpoint,
+    restore_latest_valid,
+    save_checkpoint,
+    valid_steps,
+    verify_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "CheckpointCorruptError", "CheckpointError", "CheckpointMismatchError",
+    "all_steps", "config_fingerprint", "latest_step", "latest_valid_step",
+    "restore_checkpoint", "restore_latest_valid", "save_checkpoint",
+    "valid_steps", "verify_checkpoint",
+]

@@ -1,18 +1,84 @@
-"""Flat-npz pytree checkpointing with step metadata.
+"""Durable flat-npz pytree checkpointing: atomic writes, per-array
+checksums, a validated manifest, and newest-*valid* fallback restore.
 
 Leaves are addressed by their tree path ("blocks/b0_attn/attn/wq/w"), so a
 restore can rebuild into any pytree with the same structure — including the
-optimizer state. Atomic rename guards against torn writes.
+full HF optimizer state (damping λ, Krylov warm start δ_{k-1}, hybrid flag,
+step counter), which is what makes a resumed run *step-deterministic*: the
+continuation executes the same program on the same state and the same
+step-indexed batches as the uninterrupted run (asserted bitwise on params
+in tests/test_checkpoint.py).
+
+Durability contract (what a ``kill -9`` mid-write can and cannot leave):
+
+  * writes go to a temp file in the SAME directory, are flushed + fsync'd,
+    and land under the final name via ``os.replace`` (atomic on POSIX) —
+    the final name is never observable half-written; the directory entry
+    itself is fsync'd so the rename survives a crash of the whole host;
+  * every array carries a CRC32 in the ``__manifest__`` JSON record, so a
+    torn or bit-flipped file is *detected* at restore, not silently loaded
+    (``verify_checkpoint`` / ``CheckpointCorruptError``);
+  * ``restore_latest_valid`` scans steps newest-first and restores the
+    first checkpoint that verifies — a corrupted latest falls back to the
+    previous valid one instead of poisoning the resume;
+  * the manifest records a config fingerprint and the writing process
+    count; ``restore_checkpoint`` refuses (``CheckpointMismatchError``) to
+    restore state into an incompatible run instead of trusting the step
+    number alone.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
 import os
 import tempfile
-from typing import Any
+import zlib
+from typing import Any, Optional
 
 import jax
 import numpy as np
+
+FORMAT_VERSION = 2
+
+
+class CheckpointError(Exception):
+    """Base class for checkpoint failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """The checkpoint file is torn, unreadable, or fails its checksums."""
+
+
+class CheckpointMismatchError(CheckpointError):
+    """The checkpoint is valid but belongs to an incompatible run
+    (config fingerprint or process count differ from the restorer's)."""
+
+
+def config_fingerprint(obj: Any) -> str:
+    """Stable short fingerprint of a run configuration.
+
+    Accepts dataclasses / dicts / tuples / primitives; the JSON-canonical
+    form (sorted keys) is hashed so field order never matters. Used by the
+    manifest so a resume into a different arch/solver/batch shape is
+    refused instead of silently restoring incompatible optimizer state.
+    """
+
+    def canon(x):
+        if dataclasses.is_dataclass(x) and not isinstance(x, type):
+            return {"__dc__": type(x).__name__,
+                    **{f.name: canon(getattr(x, f.name))
+                       for f in dataclasses.fields(x)}}
+        if isinstance(x, dict):
+            return {str(k): canon(v) for k, v in sorted(x.items())}
+        if isinstance(x, (list, tuple)):
+            return [canon(v) for v in x]
+        if isinstance(x, (str, int, float, bool)) or x is None:
+            return x
+        return repr(x)
+
+    blob = json.dumps(canon(obj), sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
 def _flatten_with_paths(tree):
@@ -34,49 +100,240 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, step: int, params: Any, opt_state: Any = None, extra: dict | None = None):
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    params: Any,
+    opt_state: Any = None,
+    extra: dict | None = None,
+    *,
+    fingerprint: Optional[str] = None,
+    processes: int = 1,
+) -> str:
+    """Atomically write ``ckpt_{step}.npz`` with checksums + manifest.
+
+    ``fingerprint`` (see :func:`config_fingerprint`) and ``processes`` are
+    recorded in the manifest and validated on restore. ``extra`` rides in
+    both the manifest and the legacy ``__meta__`` record.
+    """
     os.makedirs(directory, exist_ok=True)
     payload = {f"params/{k}": v for k, v in _flatten_with_paths(params).items()}
     if opt_state is not None:
-        payload.update({f"opt/{k}": v for k, v in _flatten_with_paths(opt_state).items()})
+        payload.update({f"opt/{k}": v
+                        for k, v in _flatten_with_paths(opt_state).items()})
     meta = {"step": int(step), **(extra or {})}
+    manifest = {
+        "format": FORMAT_VERSION,
+        "step": int(step),
+        "fingerprint": fingerprint,
+        "processes": int(processes),
+        "checksums": {k: _crc(v) for k, v in payload.items()},
+        "extra": dict(extra or {}),
+    }
     final = os.path.join(directory, f"ckpt_{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, __meta__=json.dumps(meta), **payload)
-    os.replace(tmp, final)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta),
+                     __manifest__=json.dumps(manifest), **payload)
+            # Durability before visibility: the bytes must be on disk
+            # BEFORE the rename makes the final name observable, or a
+            # crash can leave a fully-named, half-written checkpoint.
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    # fsync the directory entry so the rename itself survives a host crash.
+    dfd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
     return final
 
 
-def latest_step(directory: str) -> int | None:
+def _step_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.npz")
+
+
+def all_steps(directory: str) -> list:
+    """Every checkpoint step present on disk (no validity check), sorted."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(f[len("ckpt_"):-len(".npz")])
         for f in os.listdir(directory)
         if f.startswith("ckpt_") and f.endswith(".npz")
-    ]
-    return max(steps) if steps else None
+    )
 
 
-def restore_checkpoint(directory: str, step: int, params_like: Any, opt_state_like: Any = None):
+def latest_step(directory: str) -> int | None:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def verify_checkpoint(path: str) -> dict:
+    """Integrity-check one checkpoint file; return its manifest.
+
+    Raises :class:`CheckpointCorruptError` on a torn/unreadable file, a
+    missing manifest, a key set that disagrees with the manifest, or any
+    per-array CRC32 mismatch.
+    """
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            if "__manifest__" not in z.files:
+                raise CheckpointCorruptError(
+                    f"{path}: no __manifest__ record (pre-durability format "
+                    "or torn write)")
+            manifest = json.loads(str(z["__manifest__"]))
+            checksums = manifest.get("checksums", {})
+            keys = {k for k in z.files if k not in ("__meta__", "__manifest__")}
+            if keys != set(checksums):
+                raise CheckpointCorruptError(
+                    f"{path}: manifest/key mismatch "
+                    f"(missing={sorted(set(checksums) - keys)[:3]} "
+                    f"extra={sorted(keys - set(checksums))[:3]})")
+            for k, want in checksums.items():
+                got = _crc(z[k])
+                if got != int(want):
+                    raise CheckpointCorruptError(
+                        f"{path}: checksum mismatch on {k!r} "
+                        f"(stored {want}, computed {got})")
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:  # zipfile/json/np errors: torn or garbled file
+        raise CheckpointCorruptError(f"{path}: unreadable ({e})") from e
+    return manifest
+
+
+def valid_steps(directory: str) -> list:
+    """Steps whose checkpoint files pass :func:`verify_checkpoint`."""
+    out = []
+    for step in all_steps(directory):
+        try:
+            verify_checkpoint(_step_path(directory, step))
+        except CheckpointCorruptError:
+            continue
+        out.append(step)
+    return out
+
+
+def latest_valid_step(directory: str) -> int | None:
+    """Newest step that verifies clean (newest-first scan, torn files
+    skipped). None when no valid checkpoint exists."""
+    for step in reversed(all_steps(directory)):
+        try:
+            verify_checkpoint(_step_path(directory, step))
+        except CheckpointCorruptError:
+            continue
+        return step
+    return None
+
+
+def _check_manifest(manifest: dict, path: str,
+                    expect_fingerprint: Optional[str],
+                    expect_processes: Optional[int]) -> None:
+    if (expect_fingerprint is not None
+            and manifest.get("fingerprint") is not None
+            and manifest["fingerprint"] != expect_fingerprint):
+        raise CheckpointMismatchError(
+            f"{path}: config fingerprint {manifest['fingerprint']!r} does "
+            f"not match this run's {expect_fingerprint!r} — the checkpoint "
+            "was written by a different model/optimizer configuration; "
+            "refusing to restore incompatible state (point --ckpt-dir at a "
+            "fresh directory, or rerun with the original config)")
+    if (expect_processes is not None
+            and manifest.get("processes") is not None
+            and int(manifest["processes"]) != int(expect_processes)):
+        raise CheckpointMismatchError(
+            f"{path}: written by {manifest['processes']} process(es), "
+            f"restoring into {expect_processes} — replicated optimizer "
+            "state is only step-deterministic at the writing process "
+            "count; refusing (restart with --num-processes "
+            f"{manifest['processes']})")
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    params_like: Any,
+    opt_state_like: Any = None,
+    *,
+    expect_fingerprint: Optional[str] = None,
+    expect_processes: Optional[int] = None,
+    verify: bool = True,
+):
     """Restore into templates (shape/structure donors). Returns
-    (params, opt_state, meta)."""
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    (params, opt_state, meta).
+
+    ``verify=True`` (default) checksums every array and validates the
+    manifest against ``expect_fingerprint`` / ``expect_processes`` BEFORE
+    any state is rebuilt — the step number alone is never trusted
+    (:class:`CheckpointCorruptError` / :class:`CheckpointMismatchError`).
+    """
+    path = _step_path(directory, step)
+    if verify:
+        manifest = verify_checkpoint(path)
+        _check_manifest(manifest, path, expect_fingerprint, expect_processes)
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z["__meta__"]))
-        data = {k: z[k] for k in z.files if k != "__meta__"}
+        data = {k: z[k] for k in z.files
+                if k not in ("__meta__", "__manifest__")}
 
     def rebuild(template, prefix):
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for p, leaf in flat:
             key = prefix + "/".join(_path_str(x) for x in p)
+            if key not in data:
+                raise CheckpointMismatchError(
+                    f"{path}: missing leaf {key!r} — the restore template's "
+                    "tree structure differs from the saved one")
             arr = data[key]
-            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            if arr.shape != leaf.shape:
+                raise CheckpointMismatchError(
+                    f"{path}: shape mismatch on {key!r} "
+                    f"(saved {arr.shape}, template {leaf.shape})")
             leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     params = rebuild(params_like, "params/")
     opt_state = rebuild(opt_state_like, "opt/") if opt_state_like is not None else None
     return params, opt_state, meta
+
+
+def restore_latest_valid(
+    directory: str,
+    params_like: Any,
+    opt_state_like: Any = None,
+    *,
+    expect_fingerprint: Optional[str] = None,
+    expect_processes: Optional[int] = None,
+):
+    """Restore the newest checkpoint that passes integrity checks.
+
+    Corrupt/torn files are skipped (with a fallback to older steps);
+    manifest *mismatches* are NOT skipped — a valid checkpoint from an
+    incompatible run raises :class:`CheckpointMismatchError`, because
+    silently resuming older compatible state would hide the operator
+    error. Returns (params, opt_state, meta, step) or None when the
+    directory holds no valid checkpoint.
+    """
+    for step in reversed(all_steps(directory)):
+        path = _step_path(directory, step)
+        try:
+            manifest = verify_checkpoint(path)
+        except CheckpointCorruptError:
+            continue
+        _check_manifest(manifest, path, expect_fingerprint, expect_processes)
+        params, opt_state, meta = restore_checkpoint(
+            directory, step, params_like, opt_state_like, verify=False)
+        return params, opt_state, meta, step
+    return None

@@ -197,6 +197,16 @@ class HFOptConfig:
     # (benchmarks/comm_model.py overlap=True, measured by
     # benchmarks/fig5_scaling.py --executed).
     overlap: bool = False
+    # Divergence sentinel (core.hf): reject_nonfinite rolls back any outer
+    # step whose accepted loss or update is non-finite (NaN curvature
+    # batch, overflow) and boosts λ instead of poisoning the params;
+    # strict_descent additionally rejects finite steps whose loss rises by
+    # more than descent_guard·max(1, |f0|). reject_boost scales λ on a
+    # rejection (<=0 → damping_inc²).
+    reject_nonfinite: bool = True
+    strict_descent: bool = False
+    descent_guard: float = 0.0
+    reject_boost: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,12 +35,22 @@ from __future__ import annotations
 
 import collections
 import contextlib
-from typing import Any, Iterator, Sequence
+import os
+import sys
+import threading
+import time
+from typing import Any, Callable, Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from ..obs import telemetry as _telemetry
+
+# Process exit code used when the watchdog kills a worker stuck in a
+# collective. Chosen distinct from Python's 0/1/2 and from signal codes
+# (128+N) so the supervisor (launch/multiproc.py, which re-exports this)
+# can tell "watchdog fired" apart from an ordinary crash in its logs.
+EXIT_WATCHDOG = 87
 
 # Primitive names that move data across mesh axes (psum covers pmean).
 COLLECTIVE_PRIMS = frozenset({
@@ -89,6 +99,113 @@ def count_executed() -> Iterator[CollectiveCounts]:
         _active = prev
 
 
+class Watchdog:
+    """Turn an indefinitely-blocking collective into a detectable death.
+
+    A gloo all-reduce whose peer died blocks *forever* inside a C++ call:
+    no Python exception can be raised there and a signal handler will not
+    run until the call returns (which it never does). The only reliable
+    escape is a side thread that notices the collective has been
+    outstanding too long and hard-exits the process — the supervisor
+    (``launch.multiproc.spawn_supervised``) then sees ``EXIT_WATCHDOG``
+    and restarts the job from the last valid checkpoint.
+
+    Arm/disarm callbacks are baked into :func:`preduce` sites traced while
+    :func:`collective_watchdog` is installed: arm fires at reduce-input-
+    ready (the earliest the collective can issue), disarm at reduce-output
+    (completion) — the same data-dependence trick as the telemetry spans,
+    so the armed window brackets exactly the blocking region. Per-tag FIFO
+    pairing mirrors ``Telemetry._pending``.
+
+    ``on_timeout`` (tests) replaces the default hard-exit with a callable
+    ``(tag, waited_s) -> None``.
+    """
+
+    def __init__(self, timeout_s: float,
+                 on_timeout: Optional[Callable[[str, float], None]] = None,
+                 poll_s: Optional[float] = None):
+        self.timeout_s = float(timeout_s)
+        self.on_timeout = on_timeout
+        self._poll_s = poll_s if poll_s is not None else max(
+            0.05, self.timeout_s / 4.0)
+        self._lock = threading.Lock()
+        self._outstanding: dict = {}   # tag -> deque of arm timestamps
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.fired = False
+        self.fired_tag: Optional[str] = None
+
+    def arm(self, tag: str) -> None:
+        with self._lock:
+            self._outstanding.setdefault(
+                tag, collections.deque()).append(time.time())
+
+    def disarm(self, tag: str) -> None:
+        with self._lock:
+            q = self._outstanding.get(tag)
+            if q:
+                q.popleft()
+
+    def _oldest_overdue(self, now: float):
+        with self._lock:
+            for tag, q in self._outstanding.items():
+                if q and now - q[0] > self.timeout_s:
+                    return tag, now - q[0]
+        return None
+
+    def start(self) -> "Watchdog":
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name="collective-watchdog")
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self._poll_s):
+            hit = self._oldest_overdue(time.time())
+            if hit is None:
+                continue
+            tag, waited = hit
+            self.fired, self.fired_tag = True, tag
+            if self.on_timeout is not None:
+                self.on_timeout(tag, waited)
+                return
+            sys.stderr.write(
+                f"[watchdog] collective {tag!r} blocked {waited:.1f}s "
+                f"(> {self.timeout_s:.1f}s); peer presumed dead — "
+                f"exiting {EXIT_WATCHDOG}\n")
+            sys.stderr.flush()
+            # os._exit, not sys.exit: the main thread is wedged in gloo
+            # C++ and will never unwind a SystemExit.
+            os._exit(EXIT_WATCHDOG)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)
+
+
+_watchdog: Optional[Watchdog] = None
+
+
+@contextlib.contextmanager
+def collective_watchdog(timeout_s: float,
+                        on_timeout: Optional[Callable] = None,
+                        poll_s: Optional[float] = None):
+    """Trace-time install: ``preduce`` sites traced inside this context
+    bake in watchdog arm/disarm callbacks (same lifetime rule as
+    ``count_executed`` — the compiled program keeps feeding the returned
+    :class:`Watchdog` after the context exits). The monitor thread starts
+    immediately; call ``.stop()`` to retire it (tests), or leave it for
+    the life of the process (training)."""
+    global _watchdog
+    wd = Watchdog(timeout_s, on_timeout, poll_s).start()
+    prev, _watchdog = _watchdog, wd
+    try:
+        yield wd
+    finally:
+        _watchdog = prev
+
+
 def preduce(tree: Any, axes: Sequence[str] | str, tag: str = "reduce"):
     """``lax.pmean`` over a pytree, tagged for executed-count auditing.
 
@@ -109,28 +226,40 @@ def preduce(tree: Any, axes: Sequence[str] | str, tag: str = "reduce"):
             jnp.zeros((), jnp.float32) * jnp.sum(leaf).astype(jnp.float32),
         )
     sink = _telemetry.active()
-    if sink is None:
+    wd = _watchdog
+    if sink is None and wd is None:
         return jax.lax.pmean(tree, axes)
-    # Telemetry span per executed reduction: the begin callback depends
-    # only on the reduce INPUT (XLA:CPU runs it at input-ready — the
-    # earliest the collective could issue), the end callback on the reduce
-    # OUTPUT (completion). Under HFConfig.overlap the hidden grad-reduce
-    # span therefore visibly brackets the curvature primal build; the
-    # blocking schedule closes it first. Count tag is unchanged — the
-    # label (e.g. "grad_reduce" from telemetry.collective_label) only
-    # distinguishes events, so PR 7 executed-count audits stay valid.
+    # Telemetry span / watchdog window per executed reduction: the begin
+    # callback depends only on the reduce INPUT (XLA:CPU runs it at
+    # input-ready — the earliest the collective could issue), the end
+    # callback on the reduce OUTPUT (completion). Under HFConfig.overlap
+    # the hidden grad-reduce span therefore visibly brackets the curvature
+    # primal build; the blocking schedule closes it first. The watchdog
+    # arms over exactly the same window, so a peer death mid-reduce leaves
+    # it armed past its timeout. Count tag is unchanged — the label (e.g.
+    # "grad_reduce" from telemetry.collective_label) only distinguishes
+    # events, so PR 7 executed-count audits stay valid.
     label = _telemetry.current_collective_label() or tag
+
+    def _begin(_, _s=sink, _w=wd, _t=tag, _l=label):
+        if _w is not None:
+            _w.arm(_t)
+        if _s is not None:
+            _s.collective_begin(_t, _l)
+
+    def _end(_, _s=sink, _w=wd, _t=tag, _l=label):
+        if _w is not None:
+            _w.disarm(_t)
+        if _s is not None:
+            _s.collective_end(_t, _l)
+
     leaf_in = jax.tree_util.tree_leaves(tree)[0]
     jax.debug.callback(
-        lambda _, _s=sink, _t=tag, _l=label: _s.collective_begin(_t, _l),
-        jnp.zeros((), jnp.float32) * jnp.sum(leaf_in).astype(jnp.float32),
-    )
+        _begin, jnp.zeros((), jnp.float32) * jnp.sum(leaf_in).astype(jnp.float32))
     out = jax.lax.pmean(tree, axes)
     leaf_out = jax.tree_util.tree_leaves(out)[0]
     jax.debug.callback(
-        lambda _, _s=sink, _t=tag, _l=label: _s.collective_end(_t, _l),
-        jnp.zeros((), jnp.float32) * jnp.sum(leaf_out).astype(jnp.float32),
-    )
+        _end, jnp.zeros((), jnp.float32) * jnp.sum(leaf_out).astype(jnp.float32))
     return out
 
 

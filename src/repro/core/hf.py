@@ -90,6 +90,7 @@ METRICS_SCHEMA = (
     "cg_iters", "cg_residual", "krylov_syncs", "blocking_syncs",
     "sstep_fallback", "sstep_basis_fallback", "sstep_basis_degraded",
     "nc_found", "nc_used", "nc_curv", "step_norm", "used_gn",
+    "step_rejected",
 )
 
 
@@ -182,6 +183,25 @@ class HFConfig:
     # metrics["blocking_syncs"] reports the executed blocking count either
     # way; benchmarks/comm_model.py carries the overlap=True formula.
     overlap: bool = False
+    # Divergence sentinel (robustness — see tests/test_hf_robustness.py and
+    # benchmarks/chaos_check.py). The repo deliberately runs INDEFINITE
+    # stochastic Hessians through Bi-CG-STAB, so a poisoned curvature batch
+    # (NaN/Inf activations, corrupted shard) can hand the line search a
+    # non-finite direction; without a guard the `0 * NaN = NaN` update
+    # poisons the parameters forever. With ``reject_nonfinite`` (default
+    # on) an outer step whose accepted loss or step norm is non-finite is
+    # REJECTED: params and warm start are kept, λ is boosted through the
+    # existing Levenberg-Marquardt machinery (``reject_boost``; 0 ⇒
+    # damping_inc²), and metrics["step_rejected"] / a telemetry fault
+    # event record it. ``strict_descent`` additionally rejects any step
+    # whose new loss exceeds f0 + descent_guard·max(1, |f0|) — off by
+    # default (the Armijo search already enforces sufficient decrease;
+    # strict mode is for chaos/fault-injection runs where the loss itself
+    # may be computed from poisoned data).
+    reject_nonfinite: bool = True
+    strict_descent: bool = False
+    descent_guard: float = 0.0
+    reject_boost: float = 0.0
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
@@ -474,6 +494,35 @@ def hf_step(
     new_params = tree_axpy_cast(ls.alpha, delta, params)
     delta_taken = tree_scale(ls.alpha, delta)
 
+    # ---- divergence sentinel: reject poisoned / ascent steps ---------------
+    # A non-finite accepted loss or step (poisoned curvature batch, solver
+    # blow-up) must not reach the parameters: even the alpha=0 "zero step"
+    # is `0 * NaN = NaN` leaf-wise when delta itself is non-finite. Reject:
+    # keep params, drop the warm start (it would re-inject the poisoned
+    # direction next step), boost λ through the LM machinery, and report it
+    # (metrics["step_rejected"] + a `repro.obs` fault event). strict_descent
+    # additionally rejects real loss increases beyond the guard.
+    rejected = jnp.zeros((), bool)
+    if config.reject_nonfinite or config.strict_descent:
+        accept = jnp.ones((), bool)
+        if config.reject_nonfinite:
+            finite_ok = jnp.logical_and(
+                jnp.isfinite(ls.f_new), jnp.isfinite(tree_norm(delta_taken)))
+            accept = jnp.logical_and(accept, finite_ok)
+        if config.strict_descent:
+            guard = config.descent_guard * jnp.maximum(1.0, jnp.abs(f0))
+            accept = jnp.logical_and(accept, ls.f_new <= f0 + guard)
+        rejected = jnp.logical_not(accept)
+        boost = (config.reject_boost if config.reject_boost > 0
+                 else config.damping_inc ** 2)
+        lam_new = jnp.where(accept, lam_new,
+                            jnp.clip(lam * boost, 1e-8, 1e8))
+        rho = jnp.where(accept, rho, 0.0)
+        new_params = tree_where(accept, new_params, params)
+        delta_taken = tree_where(
+            accept, delta_taken, tree_zeros_like(state.prev_delta))
+    _telemetry.reject_event(state.step, rejected, lam_new, ls.f_new)
+
     if config.solver == "hybrid_cg":
         # NC encountered this (exact-Hessian) iteration → GN next iteration;
         # after a GN iteration always return to the exact Hessian.
@@ -532,6 +581,11 @@ def hf_step(
         "nc_curv": res.nc_curv,
         "step_norm": tree_norm(delta_taken),
         "used_gn": state.use_gn,
+        # Divergence sentinel (reject_nonfinite / strict_descent): the step
+        # was rejected — params unchanged, warm start dropped, λ boosted
+        # (also emitted as a `repro.obs` fault event, visible in the
+        # Perfetto trace's events lane).
+        "step_rejected": rejected,
     }
     # Trace-time contract: the metrics dict and the published schema move in
     # lockstep (tests/test_telemetry.py::test_metrics_contract).

@@ -136,11 +136,11 @@ def _cg_engine(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float,
     rz0, rr0 = be.dot2(z0, r0)  # (<z0,r0>, <r0,r0>); equal for identity M
 
     def cond(carry):
-        (_, _, _, _, _, k, done, _, _) = carry
+        (_, _, _, _, _, k, done, _, _, _) = carry
         return jnp.logical_and(k < max_iters, jnp.logical_not(done))
 
     def body(carry):
-        x, r, p, rz, rr, k, done, nc, hist = carry
+        x, r, p, rz, rr, k, done, nc, broke, hist = carry
         Ap = A_(p)
         pAp, p_sq = be.dot2(Ap, p)
         nc = nc_probe(be, p, pAp, p_sq, lam, nc)
@@ -156,29 +156,40 @@ def _cg_engine(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float,
         rz_new = rr_new if m is None else be.dot(r_new, z_new)
         beta = rz_new / jnp.maximum(rz, _EPS)
         p_new = be.axpy(beta, p, z_new)
-        x = be.where(trunc, x, x_new)
-        r = be.where(trunc, r, r_new)
-        p = be.where(trunc, p, p_new)
-        rz_out = jnp.where(trunc, rz, rz_new)
-        rr_out = jnp.where(trunc, rr, rr_new)
+        # Non-finite operator products (NaN/Inf HVP, e.g. an overflowing or
+        # poisoned curvature batch) break the recurrence *silently*: every
+        # comparison against NaN is False, so neither the truncation test
+        # nor the tolerance test would ever fire and the poisoned iterate
+        # would come back looking like a normal max_iters solve. Detect,
+        # freeze the last finite iterate, and report ``breakdown``.
+        bad = jnp.logical_not(jnp.logical_and(jnp.isfinite(pAp),
+                                              jnp.isfinite(rr_new)))
+        freeze = jnp.logical_or(trunc, bad)
+        x = be.where(freeze, x, x_new)
+        r = be.where(freeze, r, r_new)
+        p = be.where(freeze, p, p_new)
+        rz_out = jnp.where(freeze, rz, rz_new)
+        rr_out = jnp.where(freeze, rr, rr_new)
         # Residual curve from the carried scalar — no extra reductions
         # (rr_out is the frozen pre-step value on a truncation iteration).
-        hist = hist.at[k].set(jnp.sqrt(rr_out))
-        done_new = jnp.logical_or(trunc, jnp.sqrt(rr_new) < tol * b_norm)
-        return (x, r, p, rz_out, rr_out, k + 1, done_new, nc, hist)
+        hist = hist.at[k].set(jnp.where(bad, jnp.nan, jnp.sqrt(rr_out)))
+        done_new = jnp.logical_or(freeze, jnp.sqrt(rr_new) < tol * b_norm)
+        return (x, r, p, rz_out, rr_out, k + 1, done_new, nc,
+                jnp.logical_or(broke, bad), hist)
 
     init = (
         x0_, r0, z0, rz0, rr0, jnp.zeros((), jnp.int32),
         jnp.sqrt(rr0) < tol * b_norm, nc_init(be, b_),
+        jnp.zeros((), bool),
         jnp.full((max_iters,), jnp.nan, jnp.float32),
     )
-    x, r, _, _, rr, k, _, nc, hist = jax.lax.while_loop(cond, body, init)
+    x, r, _, _, rr, k, _, nc, broke, hist = jax.lax.while_loop(cond, body, init)
     # (P)CG on the (damped, PSD-unless-truncated) system is φ-monotone:
     # best == last. One blocking reduction per iteration (the dots that
     # produce α/β gate the next step): syncs == iters.
     x, r, nc_dir = be.lower(x), be.lower(r), be.lower(nc.dir)
     return KrylovResult(x, r, x, r, nc_dir, nc.found, nc.curv, k, jnp.sqrt(rr),
-                        syncs=k, breakdown=jnp.zeros((), bool),
+                        syncs=k, breakdown=broke,
                         residual_history=hist)
 
 
@@ -256,7 +267,15 @@ def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
             alpha / jnp.where(jnp.abs(gamma) < _EPS, 1.0, gamma)
         )
         p_new = be.fused_update(r_new, p, v, beta, -beta * gamma)
-        breakdown = jnp.logical_or(breakdown_a, breakdown_g)
+        # Non-finite recurrence scalars (NaN HVP → NaN ρ/‖r‖²) evade the
+        # ρ/ω collapse guards — guard_div tests |den| < eps, and |NaN| < eps
+        # is False — so without this check a poisoned operator would freeze
+        # nothing and the NaN iterate would be returned un-flagged. Fold
+        # non-finiteness into breakdown: freeze + terminate + report.
+        bad = jnp.logical_not(jnp.logical_and(jnp.isfinite(rho_new),
+                                              jnp.isfinite(rr_new)))
+        breakdown = jnp.logical_or(jnp.logical_or(breakdown_a, breakdown_g),
+                                   bad)
         x = be.where(breakdown, x, x_new)
         r = be.where(breakdown, r, r_new)
         p = be.where(breakdown, p, p_new)

@@ -27,13 +27,15 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..checkpoint import config_fingerprint, restore_latest_valid, save_checkpoint
 from ..configs import ARCH_IDS, HFOptConfig, get_config, get_smoke_config
+from ..core import collectives as collectives_mod
 from ..data import lm_batch
 from ..models import build_model
 from ..obs import telemetry as telemetry_mod
 from ..obs import trace as trace_mod
 from ..optim import make_optimizer
+from . import faults as faults_mod
 from . import multiproc
 from .mesh import make_data_mesh
 
@@ -58,10 +60,12 @@ def train(
     sstep_solver: str = "auto",
     sstep_basis: str = "monomial",
     overlap: bool = False,
+    strict_descent: bool = False,
     distributed: bool = False,
     ckpt_dir: str | None = None,
     ckpt_every: int = 0,
     telemetry_dir: str | None = None,
+    watchdog_s: float = 0.0,
     log_fn=print,
 ):
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
@@ -75,7 +79,7 @@ def train(
         curvature_mode=curvature_mode,
         curvature_chunk_size=curvature_chunk_size,
         sstep_s=sstep, sstep_solver=sstep_solver, sstep_basis=sstep_basis,
-        overlap=overlap,
+        overlap=overlap, strict_descent=strict_descent,
     )
     mesh = None
     if distributed:
@@ -98,11 +102,20 @@ def train(
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     state = opt.init(params)
+    # The manifest fingerprint covers everything that determines the step
+    # program + batch stream; restore refuses checkpoints from any other
+    # configuration instead of trusting the step number (satellite 1).
+    nproc = jax.process_count()
+    fingerprint = config_fingerprint(dict(
+        arch=arch, smoke=smoke, opt=opt_cfg,
+        batch_size=batch_size, seq_len=seq_len))
     start = 0
     if ckpt_dir:
-        last = latest_step(ckpt_dir)
-        if last is not None:
-            params, state, meta = restore_checkpoint(ckpt_dir, last, params, state)
+        restored = restore_latest_valid(
+            ckpt_dir, params, state,
+            expect_fingerprint=fingerprint, expect_processes=nproc)
+        if restored is not None:
+            params, state, meta, ck_step = restored
             start = meta["step"]
             log_fn(f"restored checkpoint at step {start}")
     if mesh is not None:
@@ -119,27 +132,44 @@ def train(
             telemetry_dir, process_index=jax.process_index(),
             meta=dict(kind="train", arch=arch, solver=solver, steps=steps,
                       batch_size=batch_size, seq_len=seq_len, sstep=sstep,
-                      overlap=overlap, processes=jax.process_count()),
+                      overlap=overlap, processes=jax.process_count(),
+                      attempt=multiproc.restart_attempt()),
         )
+        # SIGTERM (supervisor teardown) / SIGINT / normal exit all flush
+        # the sink — a killed worker's partial event file stays parseable.
+        telemetry_mod.register_crash_flush(sink)
+
+    plan = faults_mod.FaultPlan.from_env(jax.process_index(), telemetry=sink)
+    if plan.active():
+        log_fn(f"fault plan armed: "
+               f"{'; '.join(f.spec() for f in plan.faults)}")
 
     step_fn = jax.jit(opt.step)
     compiled = None
     history = []
     for i in range(start, steps):
+        multiproc.heartbeat(i)
+        plan.on_step_begin(i)
         batch = lm_batch(jax.random.fold_in(key, 1000 + i), cfg, batch_size, seq_len)
+        batch = plan.poison_batch(i, batch)
         if mesh is not None:
             batch = multiproc.shard_batch(batch, mesh)
         if compiled is None:
             # AOT split: trace under the telemetry install context (hooks are
             # trace-time), then time XLA compilation separately so step 0's
-            # wall_s measures the step, not the compile.
+            # wall_s measures the step, not the compile. The collective
+            # watchdog is a trace-time install too; its monitor thread
+            # outlives the context (daemon — dies with the process).
             install = (telemetry_mod.install(sink) if sink is not None
                        else contextlib.nullcontext())
+            watchdog = (collectives_mod.collective_watchdog(watchdog_s)
+                        if watchdog_s > 0 else contextlib.nullcontext())
             tc = time.time()
-            with install:
+            with install, watchdog:
                 lowered = step_fn.lower(params, state, batch)
             compiled = lowered.compile()
             compile_s = round(time.time() - tc, 3)
+            multiproc.heartbeat(i)  # compile can dwarf hang_timeout_s steps
             if sink is not None:
                 sink.emit({"ev": "span", "name": "compile", "t0": tc,
                            "t1": time.time(), "step": i})
@@ -167,7 +197,9 @@ def train(
         )
         if (ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0
                 and (mesh is None or multiproc.is_primary())):
-            save_checkpoint(ckpt_dir, i + 1, params, state)
+            save_checkpoint(ckpt_dir, i + 1, params, state,
+                            fingerprint=fingerprint, processes=nproc)
+            plan.corrupt_checkpoint(i + 1, ckpt_dir)
     if sink is not None:
         sink.close()
         if mesh is not None and jax.process_count() > 1:
@@ -238,6 +270,30 @@ def main():
                          "explicit shard_map data-parallel step over an "
                          "N-way data mesh; on a TPU pod the runtime spawns "
                          "processes itself — see launch/multiproc.py")
+    ap.add_argument("--strict-descent", action="store_true",
+                    help="divergence sentinel also rejects steps whose "
+                         "accepted line-search loss INCREASES (non-finite "
+                         "updates are always rejected); rejected steps "
+                         "keep params, boost λ, and report "
+                         "metrics['step_rejected']")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="supervise the multi-process run: on a worker "
+                         "death/hang, tear down the survivors and relaunch "
+                         "everyone (resuming from the last valid "
+                         "checkpoint) up to N times with exponential "
+                         "backoff; 0 = unsupervised spawn")
+    ap.add_argument("--hang-timeout", type=float, default=0.0,
+                    help="supervisor liveness: restart when no worker "
+                         "heartbeat for this many seconds (must cover "
+                         "rendezvous + compile + one step); 0 = exit-code "
+                         "detection only")
+    ap.add_argument("--watchdog-s", type=float, default=0.0,
+                    help="per-worker collective watchdog: a collective "
+                         "blocked longer than this (peer presumed dead) "
+                         "hard-exits the worker with code "
+                         f"{multiproc.EXIT_WATCHDOG} so the supervisor "
+                         "restarts immediately instead of waiting out "
+                         "--hang-timeout; 0 = off")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--history-out", default=None)
@@ -251,7 +307,17 @@ def main():
     args = ap.parse_args()
 
     if args.num_processes > 1 and not multiproc.active():
-        multiproc.spawn(args.num_processes, "repro.launch.train", sys.argv[1:])
+        if args.max_restarts > 0:
+            restarts = multiproc.spawn_supervised(
+                args.num_processes, "repro.launch.train", sys.argv[1:],
+                max_restarts=args.max_restarts,
+                hang_timeout_s=args.hang_timeout or None,
+            )
+            print(f"[supervisor] run completed after {restarts} restart(s)",
+                  file=sys.stderr)
+        else:
+            multiproc.spawn(args.num_processes, "repro.launch.train",
+                            sys.argv[1:])
         return
     multiproc.initialize_from_env()
 
@@ -266,9 +332,11 @@ def main():
         sstep=args.sstep, sstep_solver=args.sstep_solver,
         sstep_basis=args.sstep_basis,
         overlap=args.overlap,
+        strict_descent=args.strict_descent,
         distributed=multiproc.active(),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         telemetry_dir=args.telemetry_dir,
+        watchdog_s=args.watchdog_s,
     )
     if args.history_out and (not multiproc.active() or multiproc.is_primary()):
         os.makedirs(os.path.dirname(args.history_out) or ".", exist_ok=True)

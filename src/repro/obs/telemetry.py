@@ -44,7 +44,7 @@ from typing import Any, Optional
 __all__ = [
     "Telemetry", "install", "active", "collective_label",
     "current_collective_label", "step_scope", "marker", "solve_event",
-    "ritz_event",
+    "ritz_event", "reject_event", "register_crash_flush",
 ]
 
 
@@ -243,6 +243,65 @@ def solve_event(step, *, iters, residual, syncs, residual_history,
 
     jax.debug.callback(_cb, step, iters, residual, syncs,
                        residual_history, nc_found, breakdown)
+
+
+def reject_event(step, rejected, lam, f_new) -> None:
+    """Divergence-sentinel hook: traced into every step, but the host-side
+    callback emits a ``fault`` event only when the step was actually
+    rejected (non-finite or non-descending update, see core/hf.py).
+    No-op (nothing traced) when no sink is installed."""
+    sink = _active
+    if sink is None:
+        return
+    import jax
+
+    def _cb(s, rej, l, f, _sink=sink):
+        if bool(rej):
+            _sink.emit({"ev": "fault", "kind": "step_reject",
+                        "step": int(s), "lam": float(l),
+                        "loss_new": float(f), "ts": time.time()})
+
+    jax.debug.callback(_cb, step, rejected, lam, f_new)
+
+
+def register_crash_flush(sink: Telemetry):
+    """Close ``sink`` on abnormal exit so a SIGTERM'd / interrupted worker
+    still leaves a flushed, parseable event file.
+
+    Installs an ``atexit`` hook plus SIGTERM/SIGINT handlers that flush the
+    sink, emit a final ``fault`` event recording the signal, then re-raise
+    the default disposition (so the supervisor still sees a signal death).
+    Handlers chain to any previously-installed callable handler. Safe to
+    call from non-main threads: signal installation failures are ignored
+    (the atexit hook alone still covers normal interpreter shutdown).
+    """
+    import atexit
+    import signal
+
+    atexit.register(sink.close)
+
+    def _make(signum, prev):
+        def _handler(num, frame):
+            try:
+                sink.emit({"ev": "fault", "kind": "signal",
+                           "signal": int(num), "ts": time.time()})
+                sink.close()
+            except Exception:
+                pass
+            if callable(prev):
+                prev(num, frame)
+            else:
+                signal.signal(num, signal.SIG_DFL)
+                os.kill(os.getpid(), num)
+        return _handler
+
+    for signum in (signal.SIGTERM, signal.SIGINT):
+        try:
+            prev = signal.getsignal(signum)
+            signal.signal(signum, _make(signum, prev))
+        except ValueError:
+            # signal only works in the main thread; atexit still covers us.
+            pass
 
 
 def ritz_event(ritz, ok, *, basis: str) -> None:

@@ -27,10 +27,20 @@ from typing import Optional
 
 __all__ = [
     "load_events", "phase_spans", "collective_spans", "overlap_seconds",
-    "grad_reduce_overlap", "build_trace", "merge_dir",
+    "grad_reduce_overlap", "fault_events", "build_trace", "merge_dir",
 ]
 
-_LANES = {"phase": 0, "coll": 1, "span": 2, "counter": 3, "instant": 3}
+_LANES = {"phase": 0, "coll": 1, "span": 2, "counter": 3, "instant": 3,
+          "fault": 3}
+
+
+def fault_events(events):
+    """``[{pid, kind, ts, ...}]`` for every fault/rejection event: injected
+    faults (launch/faults.py), divergence-sentinel step rejections
+    (core/hf.py via telemetry.reject_event), signal deaths. Sorted by
+    time; used by chaos checks to assert faults landed where planned."""
+    return sorted((dict(e) for e in events if e.get("ev") == "fault"),
+                  key=lambda e: (e.get("ts", 0.0), e["pid"]))
 
 
 def load_events(events_dir: str):
@@ -179,6 +189,16 @@ def build_trace(events) -> dict:
                     if k not in ("ev", "name", "ts", "pid")}
             out.append({"ph": "i", "pid": e["pid"], "tid": _LANES["instant"],
                         "name": e["name"], "ts": _us(e["ts"], t_base),
+                        "s": "p", "args": args})
+        elif kind == "fault":
+            # Process-scoped instant ("s": "p") named fault:<kind> so
+            # injected faults, step rejections, and signal deaths stand
+            # out on the events lane next to the spans they interrupt.
+            args = {k: v for k, v in e.items()
+                    if k not in ("ev", "kind", "ts", "pid")}
+            out.append({"ph": "i", "pid": e["pid"], "tid": _LANES["fault"],
+                        "name": f"fault:{e.get('kind', '?')}",
+                        "ts": _us(e.get("ts", t_base), t_base),
                         "s": "p", "args": args})
     out.sort(key=lambda e: e.get("ts", 0.0))
     return {"traceEvents": out, "displayTimeUnit": "ms"}

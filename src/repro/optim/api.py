@@ -82,6 +82,10 @@ def make_optimizer(
         sstep_solver=opt.sstep_solver,
         sstep_basis=opt.sstep_basis,
         overlap=opt.overlap,
+        reject_nonfinite=opt.reject_nonfinite,
+        strict_descent=opt.strict_descent,
+        descent_guard=opt.descent_guard,
+        reject_boost=opt.reject_boost,
     )
 
     def init(params):

@@ -1,0 +1,218 @@
+"""Durable checkpointing (ISSUE 9 tentpole): atomic checksummed writes,
+corruption detection, newest-valid fallback, manifest validation, and
+step-deterministic resume of the full HF optimizer state."""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointMismatchError,
+    all_steps,
+    config_fingerprint,
+    latest_step,
+    latest_valid_step,
+    restore_checkpoint,
+    restore_latest_valid,
+    save_checkpoint,
+    valid_steps,
+    verify_checkpoint,
+)
+from repro.core import HFConfig, hf_init, hf_step
+from repro.data import classification_dataset
+from repro.launch.faults import corrupt_file
+from repro.models import build_mlp
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "w": jnp.asarray(rng.randn(4, 3).astype(np.float32)),
+        "b": {"x": jnp.asarray(rng.randn(3).astype(np.float32))},
+    }
+
+
+def _like(t):
+    return jax.tree_util.tree_map(jnp.zeros_like, t)
+
+
+class TestRoundtrip:
+    def test_bitwise_roundtrip_params_and_opt_state(self, tmp_path):
+        params, opt = _tree(0), _tree(1)
+        save_checkpoint(str(tmp_path), 7, params, opt, extra={"note": "t"})
+        p2, o2, meta = restore_checkpoint(str(tmp_path), 7, _like(params),
+                                          _like(opt))
+        assert meta["step"] == 7 and meta["note"] == "t"
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(opt),
+                        jax.tree_util.tree_leaves(o2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_no_tmp_files_left_behind(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        leftovers = glob.glob(os.path.join(str(tmp_path), "*.tmp"))
+        assert leftovers == []
+
+    def test_verify_clean_checkpoint(self, tmp_path):
+        path = save_checkpoint(str(tmp_path), 3, _tree(), fingerprint="abcd",
+                               processes=2)
+        manifest = verify_checkpoint(path)
+        assert manifest["step"] == 3
+        assert manifest["fingerprint"] == "abcd"
+        assert manifest["processes"] == 2
+        assert manifest["checksums"]  # one CRC per array
+
+
+class TestCorruptionDetection:
+    def test_bitflip_detected_by_checksum(self, tmp_path):
+        path = save_checkpoint(str(tmp_path), 1, _tree())
+        corrupt_file(path)
+        with pytest.raises(CheckpointCorruptError):
+            verify_checkpoint(path)
+
+    def test_truncated_file_detected(self, tmp_path):
+        path = save_checkpoint(str(tmp_path), 1, _tree())
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+        with pytest.raises(CheckpointCorruptError):
+            verify_checkpoint(path)
+
+    def test_missing_manifest_detected(self, tmp_path):
+        # pre-durability (format v1) file: raw npz with no __manifest__
+        path = os.path.join(str(tmp_path), "ckpt_00000001.npz")
+        np.savez(path, **{"params/w": np.zeros(3, np.float32),
+                          "__meta__": json.dumps({"step": 1})})
+        with pytest.raises(CheckpointCorruptError, match="manifest"):
+            verify_checkpoint(path)
+
+    def test_valid_steps_skips_corrupt(self, tmp_path):
+        for s in (1, 2, 3):
+            save_checkpoint(str(tmp_path), s, _tree(s))
+        corrupt_file(os.path.join(str(tmp_path), "ckpt_00000003.npz"))
+        assert all_steps(str(tmp_path)) == [1, 2, 3]
+        assert latest_step(str(tmp_path)) == 3
+        assert valid_steps(str(tmp_path)) == [1, 2]
+        assert latest_valid_step(str(tmp_path)) == 2
+
+
+class TestNewestValidFallback:
+    def test_restore_latest_valid_skips_corrupt_newest(self, tmp_path):
+        params = _tree(0)
+        for s in (1, 2, 3):
+            save_checkpoint(str(tmp_path), s, _tree(s))
+        corrupt_file(os.path.join(str(tmp_path), "ckpt_00000003.npz"))
+        out = restore_latest_valid(str(tmp_path), _like(params))
+        assert out is not None
+        p2, opt, meta, step = out
+        assert step == 2 and meta["step"] == 2 and opt is None
+        for a, b in zip(jax.tree_util.tree_leaves(_tree(2)),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_restore_latest_valid_empty_dir(self, tmp_path):
+        assert restore_latest_valid(str(tmp_path), _like(_tree())) is None
+
+    def test_all_corrupt_returns_none(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        corrupt_file(os.path.join(str(tmp_path), "ckpt_00000001.npz"))
+        assert restore_latest_valid(str(tmp_path), _like(_tree())) is None
+
+
+class TestManifestValidation:
+    """Satellite 1: restore validates the manifest instead of trusting
+    latest_step blindly."""
+
+    def test_fingerprint_mismatch_raises(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree(), fingerprint="aaaa")
+        with pytest.raises(CheckpointMismatchError, match="fingerprint"):
+            restore_checkpoint(str(tmp_path), 1, _like(_tree()),
+                               expect_fingerprint="bbbb")
+
+    def test_process_count_mismatch_raises(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree(), processes=2)
+        with pytest.raises(CheckpointMismatchError, match="process"):
+            restore_checkpoint(str(tmp_path), 1, _like(_tree()),
+                               expect_processes=4)
+
+    def test_matching_manifest_restores(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree(), fingerprint="aaaa",
+                        processes=2)
+        restore_checkpoint(str(tmp_path), 1, _like(_tree()),
+                           expect_fingerprint="aaaa", expect_processes=2)
+
+    def test_latest_valid_does_not_skip_mismatch(self, tmp_path):
+        # A corrupt file is skipped; a MISMATCHED valid file is an
+        # operator error and must raise, not silently fall back.
+        save_checkpoint(str(tmp_path), 1, _tree(), fingerprint="aaaa")
+        save_checkpoint(str(tmp_path), 2, _tree(), fingerprint="aaaa")
+        with pytest.raises(CheckpointMismatchError):
+            restore_latest_valid(str(tmp_path), _like(_tree()),
+                                 expect_fingerprint="bbbb")
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        # extra leaf the saved tree never had
+        with pytest.raises(CheckpointMismatchError, match="structure|leaf"):
+            restore_checkpoint(str(tmp_path), 1,
+                               {"w": jnp.zeros((4, 3)), "b": {"x": jnp.zeros(3)},
+                                "extra": jnp.zeros(2)})
+        # shape mismatch on an existing leaf
+        with pytest.raises(CheckpointMismatchError, match="shape"):
+            restore_checkpoint(str(tmp_path), 1,
+                               {"w": jnp.zeros((2, 2), jnp.float32),
+                                "b": {"x": jnp.zeros(3, jnp.float32)}})
+
+
+class TestConfigFingerprint:
+    def test_stable_across_dict_order(self):
+        a = config_fingerprint({"x": 1, "y": [1, 2], "z": {"k": True}})
+        b = config_fingerprint({"z": {"k": True}, "y": [1, 2], "x": 1})
+        assert a == b and len(a) == 16
+
+    def test_dataclass_fields_covered(self):
+        a = config_fingerprint(HFConfig(solver="gn_cg"))
+        b = config_fingerprint(HFConfig(solver="bicgstab"))
+        c = config_fingerprint(HFConfig(solver="gn_cg"))
+        assert a != b and a == c
+
+
+class TestResumeDeterminism:
+    """Full HF state checkpointing makes resume step-deterministic: run
+    4 steps straight vs 2 + checkpoint + restore + 2 — bitwise-identical
+    params (λ, warm-start δ, step counter all restored)."""
+
+    def test_resume_matches_uninterrupted(self, tmp_path):
+        model = build_mlp((8, 16, 4))
+        data = classification_dataset(jax.random.PRNGKey(0), 32, 8, 4)
+        params0 = model.init(jax.random.PRNGKey(1))
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=4)
+        step = jax.jit(lambda p, s: hf_step(
+            model.loss_fn, p, s, data, data, cfg,
+            model_out_fn=model.logits_fn, out_loss_fn=model.out_loss_fn))
+
+        p, s = params0, hf_init(params0, cfg)
+        for _ in range(4):
+            p, s, _ = step(p, s)
+
+        q, t = params0, hf_init(params0, cfg)
+        for _ in range(2):
+            q, t, _ = step(q, t)
+        save_checkpoint(str(tmp_path), 2, q, t, fingerprint="f",
+                        processes=1)
+        q2, t2, _ = restore_checkpoint(str(tmp_path), 2, _like(q), _like(t),
+                                       expect_fingerprint="f",
+                                       expect_processes=1)
+        for _ in range(2):
+            q2, t2, _ = step(q2, t2)
+
+        for a, b in zip(jax.tree_util.tree_leaves(p),
+                        jax.tree_util.tree_leaves(q2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,128 @@
+"""Divergence sentinel (ISSUE 9 tentpole part 4): a poisoned batch must
+not reach the parameters. Non-finite accepted loss/step → reject the
+update (params bitwise unchanged, warm start dropped), boost λ through
+the LM machinery, and report via metrics["step_rejected"]."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HFConfig, hf_init, hf_step
+from repro.data import classification_dataset
+from repro.launch.faults import FaultPlan, parse_faults
+from repro.models import build_mlp
+
+MODEL = build_mlp((8, 16, 4))
+DATA = classification_dataset(jax.random.PRNGKey(0), 32, 8, 4)
+
+
+def _step_fn(cfg):
+    return jax.jit(lambda p, s, b: hf_step(
+        MODEL.loss_fn, p, s, b, b, cfg,
+        model_out_fn=MODEL.logits_fn, out_loss_fn=MODEL.out_loss_fn))
+
+
+def _poison(batch):
+    plan = FaultPlan(parse_faults("nan_batch@step=0"), 0)
+    return plan.poison_batch(0, batch)
+
+
+def _leaves_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)))
+
+
+class TestRejectNonfinite:
+    def test_nan_batch_rejected_params_rolled_back(self):
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=4)  # defaults: on
+        step = _step_fn(cfg)
+        params = MODEL.init(jax.random.PRNGKey(1))
+        state = hf_init(params, cfg)
+        p2, s2, m = step(params, state, _poison(DATA))
+        assert float(m["step_rejected"]) == 1.0
+        assert _leaves_equal(params, p2)  # bitwise rollback
+        # warm start dropped: the poisoned direction must not be recycled
+        assert all(np.all(np.asarray(l) == 0)
+                   for l in jax.tree_util.tree_leaves(s2.prev_delta))
+        # λ boosted by damping_inc² (reject_boost=0 default)
+        assert float(s2.lam) == pytest.approx(
+            float(state.lam) * cfg.damping_inc ** 2)
+        assert float(m["rho"]) == 0.0
+
+    def test_recovers_after_poisoned_step(self):
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=4)
+        step = _step_fn(cfg)
+        params = MODEL.init(jax.random.PRNGKey(1))
+        state = hf_init(params, cfg)
+        params, state, m = step(params, state, _poison(DATA))
+        assert float(m["step_rejected"]) == 1.0
+        losses = []
+        for _ in range(3):
+            params, state, m = step(params, state, DATA)
+            assert float(m["step_rejected"]) == 0.0
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0]  # training resumed
+
+    def test_reject_boost_honored(self):
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=4, reject_boost=10.0)
+        step = _step_fn(cfg)
+        params = MODEL.init(jax.random.PRNGKey(1))
+        state = hf_init(params, cfg)
+        _, s2, _ = step(params, state, _poison(DATA))
+        assert float(s2.lam) == pytest.approx(float(state.lam) * 10.0)
+
+    def test_clean_steps_not_rejected_and_parity_with_sentinel_off(self):
+        cfg_on = HFConfig(solver="gn_cg", max_cg_iters=4)
+        cfg_off = HFConfig(solver="gn_cg", max_cg_iters=4,
+                           reject_nonfinite=False)
+        params = MODEL.init(jax.random.PRNGKey(1))
+        p_on, s_on = params, hf_init(params, cfg_on)
+        p_off, s_off = params, hf_init(params, cfg_off)
+        step_on, step_off = _step_fn(cfg_on), _step_fn(cfg_off)
+        for _ in range(3):
+            p_on, s_on, m = step_on(p_on, s_on, DATA)
+            p_off, s_off, _ = step_off(p_off, s_off, DATA)
+            assert float(m["step_rejected"]) == 0.0
+        assert _leaves_equal(p_on, p_off)  # sentinel is a no-op when clean
+
+    def test_sentinel_off_lets_nan_through(self):
+        # Documents WHY the sentinel exists: without it the NaN batch
+        # poisons the parameters (0 * NaN = NaN even at alpha = 0).
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=4,
+                       reject_nonfinite=False)
+        step = _step_fn(cfg)
+        params = MODEL.init(jax.random.PRNGKey(1))
+        p2, _, m = step(params, hf_init(params, cfg), _poison(DATA))
+        assert "step_rejected" in m  # schema stable either way
+        leaves = np.concatenate(
+            [np.asarray(l).ravel() for l in jax.tree_util.tree_leaves(p2)])
+        assert not np.isfinite(leaves).all()
+
+
+class TestStrictDescent:
+    def test_accepts_normal_descending_steps(self):
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=8, strict_descent=True,
+                       descent_guard=1e-3)
+        step = _step_fn(cfg)
+        params = MODEL.init(jax.random.PRNGKey(1))
+        state = hf_init(params, cfg)
+        for _ in range(3):
+            params, state, m = step(params, state, DATA)
+            assert float(m["step_rejected"]) == 0.0
+
+    def test_rejects_loss_increase(self):
+        # Force an ascent acceptance: descent_guard=-10 demands the new
+        # loss beat f0 by 10·max(1,|f0|) — impossible for a real step, so
+        # strict_descent must reject and keep params.
+        cfg = HFConfig(solver="gn_cg", max_cg_iters=4, strict_descent=True,
+                       descent_guard=-10.0)
+        step = _step_fn(cfg)
+        params = MODEL.init(jax.random.PRNGKey(1))
+        state = hf_init(params, cfg)
+        p2, s2, m = step(params, state, DATA)
+        assert float(m["step_rejected"]) == 1.0
+        assert _leaves_equal(params, p2)
+        assert float(s2.lam) > float(state.lam)

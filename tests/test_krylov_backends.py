@@ -205,3 +205,54 @@ class TestConfigValidation:
     def test_get_backend_unknown_name(self):
         with pytest.raises(ValueError, match="backend"):
             get_backend("dense")
+
+
+def _nan_op(M):
+    """Operator whose products are NaN-poisoned (models a blown-up HVP)."""
+    inner = _mat_op(M)
+
+    def op(v):
+        return jax.tree_util.tree_map(lambda x: x * jnp.nan, inner(v))
+
+    return op
+
+
+class TestNonFiniteProductBreakdown:
+    """ISSUE 9 satellite: NaN curvature products surface as breakdown in
+    the standard recurrences too — for BOTH vector backends — and never
+    as convergence (NaN < tol is False; the guards must not rely on it)."""
+
+    def _sys(self):
+        rng = np.random.RandomState(3)
+        A = rng.randn(14, 14).astype(np.float32)
+        M = jnp.asarray(A @ A.T + 14 * np.eye(14, dtype=np.float32))
+        return M, _vec(rng.randn(14)), _vec(np.zeros(14))
+
+    @pytest.mark.parametrize("be", [None, "flat"])
+    def test_cg_nan_op(self, be):
+        M, b, x0 = self._sys()
+        backend = _flat_be(b) if be == "flat" else None
+        r = cg(_nan_op(M), b, x0, lam=0.0, max_iters=20, tol=1e-8,
+               backend=backend)
+        assert bool(r.breakdown)
+        assert not bool(r.residual < 1e-8)
+        assert int(r.iters) <= 2  # froze immediately, no zombie iterations
+        assert np.isfinite(_unvec(r.x)).all()
+
+    @pytest.mark.parametrize("be", [None, "flat"])
+    def test_bicgstab_nan_op(self, be):
+        M, b, x0 = self._sys()
+        backend = _flat_be(b) if be == "flat" else None
+        r = bicgstab(_nan_op(M), b, x0, lam=0.0, max_iters=20, tol=1e-8,
+                     backend=backend)
+        assert bool(r.breakdown)
+        assert not bool(r.residual < 1e-8)
+        assert np.isfinite(_unvec(r.x)).all()
+
+    def test_clean_solves_unaffected_by_guard(self):
+        # the finiteness guard must not flag healthy systems
+        M, b, x0 = self._sys()
+        for solver in (cg, bicgstab):
+            r = solver(_mat_op(M), b, x0, lam=0.0, max_iters=60, tol=1e-8)
+            assert not bool(r.breakdown)
+            assert float(r.residual) < 1e-4

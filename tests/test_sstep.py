@@ -434,3 +434,61 @@ class TestConfigValidation:
         p2, _, m = jax.jit(opt.step)(params, state, data)
         assert "krylov_syncs" in m
         assert int(m["krylov_syncs"]) <= int(m["cg_iters"]) + 1
+
+
+def _nan_op(M):
+    """Curvature operator whose products are poisoned (NaN HVP/GNVP)."""
+    inner = _mat_op(M)
+
+    def op(v):
+        return jax.tree_util.tree_map(lambda x: x * jnp.nan, inner(v))
+
+    return op
+
+
+class TestNonFiniteCurvatureBreakdown:
+    """ISSUE 9 satellite: a NaN curvature product must surface as
+    breakdown (basis degradation at worst), NEVER as convergence — IEEE
+    comparisons with NaN are all False, so an unguarded ``res < tol``
+    would silently freeze while an unguarded Gram solve would propagate
+    NaN into the iterate."""
+
+    @pytest.mark.parametrize("solver", [sstep_cg, sstep_bicgstab])
+    @pytest.mark.parametrize("fallback", [False, True])
+    def test_sstep_nan_op_breaks_down(self, solver, fallback):
+        M, b, x0 = _spd()
+        r = solver(_nan_op(M), b, x0, lam=0.0, s=2, max_iters=20, tol=1e-8,
+                   fallback=fallback)
+        assert bool(r.breakdown)
+        # never reported as converged: residual is NaN or large, not < tol
+        assert not bool(r.residual < 1e-8)
+        # the iterate is frozen at the last finite point, not poisoned
+        assert np.isfinite(_unvec(r.x)).all()
+
+    @pytest.mark.parametrize("basis", ["newton", "chebyshev"])
+    def test_nonmonomial_basis_nan_op_breaks_down(self, basis):
+        M, b, x0 = _spd()
+        r = sstep_cg(_nan_op(M), b, x0, lam=0.0, s=4, max_iters=20,
+                     tol=1e-8, basis=basis, fallback=False)
+        # the Gram guard catches the poisoned cycle (breakdown) whether or
+        # not the basis monitor separately flags degradation
+        assert bool(r.breakdown) or bool(r.basis_degraded)
+        assert not bool(r.residual < 1e-8)
+        assert np.isfinite(_unvec(r.x)).all()
+
+    def test_nan_after_first_cycle_keeps_progress(self):
+        # Poison only from the second operator application onward: the
+        # first cycle's progress must survive the later breakdown.
+        M, b, x0 = _spd()
+        inner = _mat_op(M)
+        calls = {"n": 0}
+
+        def op(v):
+            calls["n"] += 1  # trace-time count; poisons all but 1st trace
+            bad = calls["n"] > 1
+            return jax.tree_util.tree_map(
+                lambda x: x * (jnp.nan if bad else 1.0), inner(v))
+
+        r = sstep_cg(op, b, x0, lam=0.0, s=1, max_iters=20, tol=1e-10,
+                     fallback=False)
+        assert np.isfinite(_unvec(r.x)).all()
