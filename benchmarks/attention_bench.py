@@ -164,6 +164,13 @@ def run(log=print):
     return rows
 
 
+def summary(result):
+    """One-line headline for the --summary markdown table."""
+    s = result["summary"]
+    return (f"sdpa/flash peak-temp ratio {s['mem_ratio'].get('fwd_bwd')}x "
+            f"at S={s['S_max']}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",

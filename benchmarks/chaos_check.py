@@ -260,6 +260,13 @@ def check(result):
     assert [e["step"] for e in rejects] == [1], rejects
 
 
+def summary(result):
+    """One-line headline for the --summary markdown table."""
+    kr = result["kill_restart"]
+    return (f"kill/restart recovered in {kr['restarts']} restart(s), "
+            f"max loss delta {kr['max_loss_delta']:.1e}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true")

@@ -315,6 +315,14 @@ def run(log=print):
     return rows
 
 
+def summary(result):
+    """One-line headline for the --summary markdown table."""
+    s = result["solve"]
+    m = result["memory"]
+    return (f"solve speedup linearize/naive {s['speedup_linearize']}x; "
+            f"chunked growth {m['chunked_growth']}x")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",

@@ -306,6 +306,13 @@ def run(log=print):
     return rows
 
 
+def summary(result):
+    """One-line headline for the --summary markdown table."""
+    s = result["summary"]
+    return (f"mem_ok={s['mem_ok']} paged_parity={s['paged_parity_ok']} "
+            f"continuous={s['cont_ok']}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",

@@ -336,6 +336,13 @@ def check(result):
         1.0, abs(base["final_loss"])), (base["final_loss"], ov["final_loss"])
 
 
+def summary(result):
+    """One-line headline for the --summary markdown table."""
+    best = max(result["projection"], key=lambda r: r["speedup"])
+    return (f"projected {best['speedup']:.2f}x (series {best['series']}, "
+            f"N={best['N']}); executed {len(result['executed'])} runs")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true")

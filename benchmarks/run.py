@@ -13,6 +13,13 @@ workflow), and the JSONs are uploaded as workflow artifacts so the perf
 trajectory is inspectable per-commit.
 
   PYTHONPATH=src python benchmarks/run.py --tiny --check [--only sstep]
+
+``--summary`` appends a markdown table (per bench: artifact, headline
+metric, pass/fail) to ``$GITHUB_STEP_SUMMARY`` (stdout when unset) so the
+per-commit perf trajectory is readable in the Actions UI without
+downloading artifacts. ``--verify-artifacts`` asserts that EVERY registered
+bench has written its ``BENCH_*.json`` — a bench that silently fails to
+write can no longer pass green (CI runs it after the check step).
 """
 from __future__ import annotations
 
@@ -30,12 +37,69 @@ if __package__ in (None, ""):
             sys.path.insert(0, p)
 
 
+def checked_registry() -> dict:
+    """name -> module for every JSON-writing bench with its own check().
+
+    The single source of truth for check mode, ``--verify-artifacts`` and
+    the CI completeness gate: registering a bench here is what makes its
+    artifact mandatory.
+    """
+    from benchmarks import (attention_bench, chaos_check, curvature_bench,
+                            decode_bench, fig5_scaling, sstep_bench,
+                            telemetry_check, zoo_bench)
+    return {
+        "curvature": curvature_bench,
+        "sstep": sstep_bench,
+        "attention": attention_bench,
+        "decode": decode_bench,
+        "scaling": fig5_scaling,
+        "telemetry": telemetry_check,
+        "chaos": chaos_check,
+        "zoo": zoo_bench,
+    }
+
+
+def write_summary(rows: list) -> None:
+    """Render the per-bench headline table as markdown, appended to
+    ``$GITHUB_STEP_SUMMARY`` when set (the Actions UI), stdout otherwise."""
+    lines = ["## Bench summary", "",
+             "| bench | artifact | headline | status |",
+             "|---|---|---|---|"]
+    for name, artifact, headline, ok in rows:
+        lines.append(f"| {name} | `{artifact}` | {headline} | "
+                     f"{'✅ pass' if ok else '❌ FAIL'} |")
+    text = "\n".join(lines) + "\n"
+    out = os.environ.get("GITHUB_STEP_SUMMARY")
+    if out:
+        with open(out, "a") as f:
+            f.write(text)
+    else:
+        print(text)
+
+
+def verify_artifacts(only=None) -> list:
+    """Every registered bench must have written its JSON artifact (and it
+    must parse). Returns the missing/broken names."""
+    bad = []
+    for name, mod in checked_registry().items():
+        if only and name not in only:
+            continue
+        try:
+            with open(mod.JSON_OUT) as f:
+                json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"artifact missing/unreadable for bench {name!r}: "
+                  f"{mod.JSON_OUT}: {e}")
+            bad.append(name)
+    return bad
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,kernels,"
                          "attention,curvature,sstep,decode,scaling,roofline,"
-                         "telemetry,chaos (check mode only)")
+                         "telemetry,chaos,zoo (check mode only)")
     ap.add_argument("--tiny", action="store_true",
                     help="check mode: run the JSON benches at CI-smoke "
                          "shapes (same code paths, same schema)")
@@ -43,36 +107,53 @@ def main() -> None:
                     help="run the JSON-writing benches, write BENCH_*.json "
                          "and execute each bench's own check(result) "
                          "assertions (the CI bench-smoke entry point)")
+    ap.add_argument("--summary", action="store_true",
+                    help="check mode: append a markdown table of per-bench "
+                         "headline numbers + pass/fail to "
+                         "$GITHUB_STEP_SUMMARY (stdout when unset)")
+    ap.add_argument("--verify-artifacts", action="store_true",
+                    help="assert every registered bench has written its "
+                         "BENCH_*.json (the CI completeness gate); can run "
+                         "standalone after a --check pass")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    if args.verify_artifacts and not args.check:
+        missing = verify_artifacts(only)
+        if missing:
+            sys.exit(f"missing bench artifacts: {', '.join(missing)}")
+        print(f"all registered bench artifacts present "
+              f"({len(checked_registry())} registered)")
+        return
+
     from benchmarks import (fig3_variants, fig4_batchsize, fig5_scaling,
-                            kernels_bench, attention_bench, chaos_check,
+                            kernels_bench, attention_bench,
                             curvature_bench, decode_bench, roofline_table,
-                            sstep_bench, telemetry_check)
+                            sstep_bench)
 
     if args.check:
-        checked = {
-            "curvature": curvature_bench,
-            "sstep": sstep_bench,
-            "attention": attention_bench,
-            "decode": decode_bench,
-            "scaling": fig5_scaling,
-            "telemetry": telemetry_check,
-            "chaos": chaos_check,
-        }
+        checked = checked_registry()
         failures = []
+        summary_rows = []
         for name, mod in checked.items():
             if only and name not in only:
                 continue
             print(f"== {name} ({mod.JSON_OUT}) ==")
-            result = mod.run_bench(tiny=args.tiny, out_path=mod.JSON_OUT)
+            ok, headline = True, ""
             try:
+                result = mod.run_bench(tiny=args.tiny, out_path=mod.JSON_OUT)
                 mod.check(result)
                 print(f"== {name}: check ok ==")
             except AssertionError as e:
+                ok = False
                 failures.append(name)
                 print(f"== {name}: CHECK FAILED: {e} ==")
+            if ok and hasattr(mod, "summary"):
+                try:
+                    headline = mod.summary(result)
+                except Exception as e:  # a summary bug must not fail CI
+                    headline = f"(summary error: {type(e).__name__})"
+            summary_rows.append((name, mod.JSON_OUT, headline, ok))
         # Re-read what was actually written: the artifact the workflow
         # uploads must itself satisfy the schema the check ran against.
         for name, mod in checked.items():
@@ -80,6 +161,12 @@ def main() -> None:
                 continue
             with open(mod.JSON_OUT) as f:
                 json.load(f)
+        if args.summary:
+            write_summary(summary_rows)
+        if args.verify_artifacts:
+            missing = [n for n in verify_artifacts(only) if n not in failures]
+            if missing:
+                sys.exit(f"missing bench artifacts: {', '.join(missing)}")
         if failures:
             sys.exit(f"bench checks failed: {', '.join(failures)}")
         return

@@ -416,6 +416,14 @@ def run(log=print):
     return rows
 
 
+def summary(result):
+    """One-line headline for the --summary markdown table."""
+    rows = result["solvers"]["rows"]
+    std = min(r["reduces_per_outer"] for r in rows if r["s"] == 1)
+    best = min(r["reduces_per_outer"] for r in rows if r["s"] > 1)
+    return f"reduces/outer: sstep {best:.1f} vs standard {std:.1f}"
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",

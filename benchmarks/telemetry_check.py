@@ -118,6 +118,13 @@ def check(result):
     assert len(hist) == sol["iters"] and all(v == v for v in hist), sol
 
 
+def summary(result):
+    """One-line headline for the --summary markdown table."""
+    m = result["metrics"]
+    return (f"{len(result['tags'])} collective tags agree; "
+            f"blocking_syncs {int(m['blocking_syncs'])}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true")

@@ -197,6 +197,11 @@ class HFOptConfig:
     # (benchmarks/comm_model.py overlap=True, measured by
     # benchmarks/fig5_scaling.py --executed).
     overlap: bool = False
+    # Negative-curvature policy (core.hf NC_MODES): "truncate" (passive
+    # φ-best competition at the solution's norm scale) | "escape"
+    # (saddle-free |λ_min|-scaled escape step along the NC direction,
+    # Arjovsky arXiv:1506.00059 — λ from KrylovResult.nc_lambda).
+    nc_mode: str = "truncate"
     # Divergence sentinel (core.hf): reject_nonfinite rolls back any outer
     # step whose accepted loss or update is non-finite (NaN curvature
     # batch, overflow) and boosts λ instead of poisoning the params;

@@ -79,6 +79,7 @@ from .tree_math import (
 
 SOLVERS = ("gn_cg", "hessian_cg", "hybrid_cg", "bicgstab")
 SSTEP_SOLVERS = ("auto", "cg", "bicgstab")
+NC_MODES = ("truncate", "escape")
 
 # The complete per-step metrics contract of ``hf_step``: every key it
 # returns, each a finite scalar (asserted by tests/test_telemetry.py's
@@ -89,7 +90,7 @@ METRICS_SCHEMA = (
     "loss", "loss_new", "grad_norm", "lambda", "rho", "alpha", "ls_evals",
     "cg_iters", "cg_residual", "krylov_syncs", "blocking_syncs",
     "sstep_fallback", "sstep_basis_fallback", "sstep_basis_degraded",
-    "nc_found", "nc_used", "nc_curv", "step_norm", "used_gn",
+    "nc_found", "nc_used", "nc_curv", "nc_lambda", "step_norm", "used_gn",
     "step_rejected",
 )
 
@@ -116,6 +117,24 @@ class HFConfig:
     # quadratic model is unbounded below so it prescribes no scale; we take at
     # least this much and let the Armijo search (Alg. 2 line 9) globalize it.
     nc_min_step: float = 0.1
+    # What to do when the NC probe fires (the paper's differentiator over
+    # Martens-style HF is exploiting indefinite curvature):
+    #   * "truncate" — the historical passive policy: the NC direction
+    #     competes with the solver iterate under the damped quadratic model
+    #     at the solution's norm scale (floored at nc_min_step).
+    #   * "escape"   — saddle-free offense (Arjovsky, arXiv:1506.00059):
+    #     an explicit escape step along the NC direction scaled by
+    #     |λ_min(G)|, the solver's eigenvalue estimate threaded through
+    #     KrylovResult.nc_lambda (Rayleigh quotient from the standard
+    #     recurrences, refined by per-cycle Ritz values from the s-step
+    #     Grams — free, no extra reductions). The candidate is judged by
+    #     the RAW (undamped) model, which is unbounded below along true NC,
+    #     so a fired probe nearly always takes the escape step; the Armijo
+    #     search globalizes it and the divergence sentinel
+    #     (reject_nonfinite) guards the new step family — a non-finite λ
+    #     estimate yields a non-finite step that is REJECTED, never
+    #     silently masked.
+    nc_mode: str = "truncate"
     # Jacobi preconditioning: M = (|diag(Ĝ)| + λ)^α estimated by one
     # Hutchinson probe per step. CG-family solvers use PCG; Bi-CG-STAB uses
     # its right-preconditioned form. The paper omits it ("not much helpful,
@@ -224,6 +243,10 @@ class HFConfig:
             raise ValueError(
                 f"sstep_basis must be one of {SSTEP_BASES}, "
                 f"got {self.sstep_basis!r}"
+            )
+        if self.nc_mode not in NC_MODES:
+            raise ValueError(
+                f"nc_mode must be one of {NC_MODES}, got {self.nc_mode!r}"
             )
         if self.sstep_s > 1 and self.precondition:
             raise ValueError(
@@ -447,20 +470,50 @@ def hf_step(
     sol_norm = tree_norm(sol)
     xAx = tree_dot(res.x_best, jax.tree_util.tree_map(jnp.subtract, b, res.r_best))
     m_sol = sign * gx + 0.5 * xAx
-    # Scale the (unit-norm) NC direction to the solution's magnitude so the
-    # quadratic-model comparison and the line search see comparable steps; the
-    # quadratic model itself is unbounded below along NC directions so it
-    # prescribes no scale — floor at nc_min_step and let Armijo globalize.
-    nc_scale = jnp.maximum(sol_norm, config.nc_min_step)
-    nc_raw = tree_scale(nc_scale, res.nc_dir)
-    nc, _ = sign_correct(g, nc_raw)
-    g_nc = tree_dot(g, nc)
-    m_nc = jnp.where(
-        res.nc_found,
-        g_nc + 0.5 * (res.nc_curv + lam) * nc_scale**2,
-        jnp.inf,
-    )
-    take_nc = m_nc < m_sol
+    # λ_min(G) estimate for this solve: the solver's threaded nc_lambda
+    # (Ritz-refined on the s-step paths) floored by the probe's Rayleigh
+    # quotient, gated on the probe actually firing.
+    nc_lam = jnp.where(
+        res.nc_found, jnp.minimum(res.nc_lambda, res.nc_curv), 0.0)
+    if config.nc_mode == "escape":
+        # Saddle-free escape (Arjovsky, arXiv:1506.00059): step along the
+        # (unit-norm) NC direction at the |λ_min| scale — the magnitude the
+        # saddle-free Newton rescaling |H|⁻¹g prescribes along an
+        # eigendirection — instead of borrowing the solution's norm. The
+        # candidate is judged by the RAW (undamped) model, honest about
+        # being unbounded below along true negative curvature, so a fired
+        # probe nearly always escapes; Armijo globalizes the scale.
+        nc_scale = jnp.abs(nc_lam)
+        nc_raw = tree_scale(nc_scale, res.nc_dir)
+        nc, _ = sign_correct(g, nc_raw)
+        g_nc = tree_dot(g, nc)
+        m_nc = jnp.where(
+            res.nc_found,
+            g_nc + 0.5 * res.nc_curv * nc_scale**2,
+            jnp.inf,
+        )
+        # NaN-safe toward TAKING the step: a poisoned λ estimate (inf/NaN
+        # scale) must reach the divergence sentinel below as a non-finite
+        # step and be rejected there — `m_nc < m_sol` would silently mask
+        # it (NaN compares False) and accept the solver iterate instead.
+        take_nc = jnp.logical_and(
+            res.nc_found, jnp.logical_not(m_sol <= m_nc))
+    else:
+        # Scale the (unit-norm) NC direction to the solution's magnitude so
+        # the quadratic-model comparison and the line search see comparable
+        # steps; the quadratic model itself is unbounded below along NC
+        # directions so it prescribes no scale — floor at nc_min_step and
+        # let Armijo globalize.
+        nc_scale = jnp.maximum(sol_norm, config.nc_min_step)
+        nc_raw = tree_scale(nc_scale, res.nc_dir)
+        nc, _ = sign_correct(g, nc_raw)
+        g_nc = tree_dot(g, nc)
+        m_nc = jnp.where(
+            res.nc_found,
+            g_nc + 0.5 * (res.nc_curv + lam) * nc_scale**2,
+            jnp.inf,
+        )
+        take_nc = m_nc < m_sol
     delta = tree_where(take_nc, nc, sol)
     m_lin = jnp.where(take_nc, g_nc, sign * gx)       # gᵀδ
     m_quad = jnp.where(take_nc, m_nc - g_nc, 0.5 * xAx)  # ½ δᵀAδ
@@ -579,6 +632,10 @@ def hf_step(
         "nc_found": res.nc_found,
         "nc_used": take_nc,
         "nc_curv": res.nc_curv,
+        # λ_min(G) estimate behind the escape scale (0 when the probe did
+        # not fire): Rayleigh quotient from the standard recurrences,
+        # Ritz-refined per cycle on the s-step paths.
+        "nc_lambda": nc_lam,
         "step_norm": tree_norm(delta_taken),
         "used_gn": state.use_gn,
         # Divergence sentinel (reject_nonfinite / strict_descent): the step

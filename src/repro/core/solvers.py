@@ -114,6 +114,20 @@ class KrylovResult(NamedTuple):
                            # solve event (repro.obs). For the s-step
                            # fallback path the standard solve's curve is
                            # appended after the partial s-step one.
+    nc_lambda: Any = 0.0
+                           # f32 scalar: the solver's estimate of the RAW
+                           # operator's most-negative eigenvalue λ_min(G),
+                           # available for free from data the solve already
+                           # produced. Standard recurrences report the best
+                           # (most negative) Rayleigh quotient the NC probe
+                           # saw — identical to nc_curv; the s-step solvers
+                           # refine it with the minimum Ritz value extracted
+                           # from each cycle's Gram (core.krylov.
+                           # ritz_from_segment, shifted by −λ back to the
+                           # raw operator), which lower-bounds the Rayleigh
+                           # quotient. 0 when no negative estimate exists.
+                           # This is the |λ|-scale of the saddle-free
+                           # escape step (HFConfig.nc_mode="escape").
 
 
 def _resolve(backend):
@@ -190,7 +204,7 @@ def _cg_engine(A: Op, b, x0, *, lam, M_inv, max_iters: int, tol: float,
     x, r, nc_dir = be.lower(x), be.lower(r), be.lower(nc.dir)
     return KrylovResult(x, r, x, r, nc_dir, nc.found, nc.curv, k, jnp.sqrt(rr),
                         syncs=k, breakdown=broke,
-                        residual_history=hist)
+                        residual_history=hist, nc_lambda=nc.curv)
 
 
 def cg(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
@@ -302,7 +316,7 @@ def bicgstab(A: Op, b, x0, *, lam, max_iters: int, tol: float = 5e-3,
     return KrylovResult(
         be.lower(x), be.lower(r), be.lower(best.x), be.lower(best.r),
         be.lower(nc.dir), nc.found, nc.curv, k, be.norm(r),
-        syncs=k, breakdown=broke, residual_history=hist,
+        syncs=k, breakdown=broke, residual_history=hist, nc_lambda=nc.curv,
     )
 
 

@@ -60,6 +60,7 @@ def train(
     sstep_solver: str = "auto",
     sstep_basis: str = "monomial",
     overlap: bool = False,
+    nc_mode: str = "truncate",
     strict_descent: bool = False,
     distributed: bool = False,
     ckpt_dir: str | None = None,
@@ -79,7 +80,7 @@ def train(
         curvature_mode=curvature_mode,
         curvature_chunk_size=curvature_chunk_size,
         sstep_s=sstep, sstep_solver=sstep_solver, sstep_basis=sstep_basis,
-        overlap=overlap, strict_descent=strict_descent,
+        overlap=overlap, nc_mode=nc_mode, strict_descent=strict_descent,
     )
     mesh = None
     if distributed:
@@ -270,6 +271,14 @@ def main():
                          "explicit shard_map data-parallel step over an "
                          "N-way data mesh; on a TPU pod the runtime spawns "
                          "processes itself — see launch/multiproc.py")
+    ap.add_argument("--nc-mode", default="truncate",
+                    choices=["truncate", "escape"],
+                    help="negative-curvature policy: 'truncate' (passive "
+                         "φ-best competition at the solution's norm scale) "
+                         "or 'escape' (saddle-free |λ_min|-scaled escape "
+                         "step along the NC direction — the λ estimate is "
+                         "threaded through KrylovResult.nc_lambda, "
+                         "Ritz-refined on the s-step paths)")
     ap.add_argument("--strict-descent", action="store_true",
                     help="divergence sentinel also rejects steps whose "
                          "accepted line-search loss INCREASES (non-finite "
@@ -332,6 +341,7 @@ def main():
         sstep=args.sstep, sstep_solver=args.sstep_solver,
         sstep_basis=args.sstep_basis,
         overlap=args.overlap,
+        nc_mode=args.nc_mode,
         strict_descent=args.strict_descent,
         distributed=multiproc.active(),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,

@@ -82,6 +82,7 @@ def make_optimizer(
         sstep_solver=opt.sstep_solver,
         sstep_basis=opt.sstep_basis,
         overlap=opt.overlap,
+        nc_mode=opt.nc_mode,
         reject_nonfinite=opt.reject_nonfinite,
         strict_descent=opt.strict_descent,
         descent_guard=opt.descent_guard,

@@ -31,9 +31,9 @@ BATCH = jnp.zeros((1,))
 START = {"x": jnp.asarray(0.9, jnp.float32), "y": jnp.asarray(0.0, jnp.float32)}
 
 
-def run(solver, steps=40, damping=1e-3, jitter=1e-3):
+def run(solver, steps=40, damping=1e-3, jitter=1e-3, nc_mode="truncate"):
     cfg = HFConfig(solver=solver, max_cg_iters=10, init_damping=damping,
-                   krylov_jitter=jitter)
+                   krylov_jitter=jitter, nc_mode=nc_mode)
     params, state = START, hf_init(START, cfg)
     step = jax.jit(
         lambda p, s: hf_step(
@@ -92,3 +92,74 @@ def test_bicgstab_reports_negative_curvature():
     _, metrics = run("bicgstab", steps=1)
     assert bool(metrics["nc_found"])
     assert float(metrics["nc_curv"]) < 0
+    # nc_lambda (the escape scale): a λ_min(G) estimate at least as
+    # negative as the probe's Rayleigh quotient; here λ_min = −1 exactly.
+    assert float(metrics["nc_lambda"]) <= float(metrics["nc_curv"])
+    assert float(metrics["nc_lambda"]) == pytest.approx(-1.0, abs=0.05)
+
+
+def _steps_to_exit(nc_mode, thresh=0.5, steps=40):
+    """Outer steps until |y| > thresh (out of the saddle's basin boundary).
+
+    Runs the full trajectory either way; returns (exit_step, final_params).
+    """
+    cfg = HFConfig(solver="bicgstab", max_cg_iters=10, init_damping=1e-3,
+                   krylov_jitter=1e-3, nc_mode=nc_mode)
+    params, state = START, hf_init(START, cfg)
+    step = jax.jit(lambda p, s: hf_step(loss_fn, p, s, BATCH, BATCH, cfg))
+    exit_step = steps + 1
+    for i in range(steps):
+        params, state, _ = step(params, state)
+        if exit_step > steps and abs(float(params["y"])) > thresh:
+            exit_step = i + 1
+    return exit_step, params
+
+
+def test_escape_exits_saddle_in_fewer_steps():
+    # A/B on the Fig. 2 landscape: the saddle-free escape step moves |λ_min|
+    # = 1 along the NC direction at once, while truncate's norm-matched NC
+    # step crawls at max(sol_norm, nc_min_step) per outer step as the
+    # solution component decays. Strict inequality, and both reach a minimum.
+    n_esc, p_esc = _steps_to_exit("escape")
+    n_trunc, p_trunc = _steps_to_exit("truncate")
+    assert n_esc < n_trunc
+    assert float(loss_fn(p_esc, BATCH)) == pytest.approx(-0.25, abs=1e-2)
+
+
+def test_escape_poisoned_lambda_rejected_by_sentinel(monkeypatch):
+    # Regression: nc_mode="escape" + a non-finite λ estimate must flow INTO
+    # the PR 9 divergence sentinel (step_rejected, params kept bitwise) —
+    # the escape comparison resolves NaN/inf model values TOWARD taking the
+    # NC step precisely so poisoned curvature cannot be silently accepted
+    # through a False NaN comparison.
+    import repro.core.hf as hf_mod
+
+    real_bicgstab = hf_mod.bicgstab
+
+    def poisoned(*args, **kwargs):
+        res = real_bicgstab(*args, **kwargs)
+        return res._replace(
+            nc_found=jnp.ones((), bool),
+            nc_curv=jnp.asarray(-1.0, jnp.float32),
+            nc_lambda=jnp.asarray(-jnp.inf, jnp.float32),
+        )
+
+    monkeypatch.setattr(hf_mod, "bicgstab", poisoned)
+    cfg = HFConfig(solver="bicgstab", max_cg_iters=10, init_damping=1e-3,
+                   krylov_jitter=1e-3, nc_mode="escape")
+    assert cfg.reject_nonfinite
+    state = hf_init(START, cfg)
+    new_params, new_state, metrics = hf_step(
+        loss_fn, START, state, BATCH, BATCH, cfg)
+    assert bool(metrics["step_rejected"])
+    for k in ("x", "y"):
+        np.testing.assert_array_equal(np.asarray(new_params[k]),
+                                      np.asarray(START[k]))
+    # warm start dropped, λ boosted through the LM machinery
+    assert float(jnp.abs(new_state.prev_delta["y"])) == 0.0
+    assert float(new_state.lam) > float(state.lam)
+
+
+def test_nc_mode_validated():
+    with pytest.raises(ValueError, match="nc_mode"):
+        HFConfig(nc_mode="bogus")
